@@ -1,0 +1,31 @@
+"""Shared benchmark helpers; every bench prints ``name,us_per_call,derived``."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def spearman(a, b) -> float:
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean(); rb -= rb.mean()
+    denom = np.sqrt((ra**2).sum() * (rb**2).sum())
+    return float((ra * rb).sum() / denom) if denom else 0.0

@@ -1,0 +1,64 @@
+"""Kernel benches: block-shape sweep for the Pallas matmul.
+
+No TPU in this container, so wall-clock is the interpret-mode *correctness*
+path only; the reported ``derived`` column is the analytic HBM-traffic model
+(core.autotune napkin math) that ranks block shapes for the real chip —
+this is the §Perf lever for the kernel level.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import choose_matmul_blocks
+from repro.core.cost import TPU
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+
+from .common import emit, timeit
+
+
+def traffic(m, n, k, bm, bn, bk):
+    return m * k * (n / bn) + k * n * (m / bm) + m * n
+
+
+def run():
+    m = n = k = 4096
+    cands = [
+        (128, 128, 512), (256, 256, 512), (512, 512, 512),
+        (512, 1024, 512), (1024, 512, 512), (256, 512, 1024),
+    ]
+    budget = TPU["vmem_bytes"] // 2 // 2
+    for bm, bn, bk in cands:
+        fits = (bm * bk + bk * bn + bm * bn) <= budget
+        tr = traffic(m, n, k, bm, bn, bk)
+        hbm_s = tr * 2 / TPU["hbm_bw"]
+        emit(
+            f"kernel.matmul.b{bm}x{bn}x{bk}", hbm_s,
+            f"hbm_bytes={tr*2:.3g};fits_vmem={fits}",
+        )
+    best = choose_matmul_blocks(m, n, k, elem_bytes=2)
+    emit("kernel.matmul.autotuned", 0.0, f"blocks={best}")
+
+    # interpret-mode correctness spot-check at a scaled-down shape
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((128, 128)),
+                    jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal((128, 128)),
+                    jnp.float32)
+    t = timeit(
+        lambda: np.asarray(
+            matmul_pallas(a, b, block_m=64, block_n=64, block_k=64,
+                          interpret=True)
+        ),
+        repeats=1,
+    )
+    err = np.abs(
+        np.asarray(
+            matmul_pallas(a, b, block_m=64, block_n=64, block_k=64,
+                          interpret=True)
+        ) - np.asarray(matmul_ref(a, b))
+    ).max()
+    emit("kernel.matmul.interpret_check", t, f"max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

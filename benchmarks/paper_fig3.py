@@ -1,0 +1,26 @@
+"""Paper Fig 3: the six rearrangements of the subdivided matrix-vector
+product (1a/1b/1c subdivide the vector; 2a/2b/2c subdivide the map)."""
+
+import numpy as np
+
+from repro.core.cost import cpu_cost
+from repro.core.enumerate import paper_fig3_variants
+from repro.core.execute import execute_variant
+
+from .common import emit, timeit
+
+
+def run(n: int = 1024, b: int = 64):
+    rng = np.random.default_rng(2)
+    A = rng.standard_normal((n, n))
+    u = rng.standard_normal(n)
+    ref = A @ u
+    for label, order, spec in paper_fig3_variants(n, n, b):
+        out = execute_variant(spec, order, {"A": A, "u": u})
+        assert np.allclose(out, ref, rtol=1e-8), label
+        t = timeit(lambda o=order, s=spec: execute_variant(s, o, {"A": A, "u": u}))
+        emit(f"fig3.{label}", t, f"model_cost={cpu_cost(spec, order):.3g}")
+
+
+if __name__ == "__main__":
+    run()

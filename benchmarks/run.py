@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline numbers for the assigned
+architectures come from the dry-run artifacts (results/) via
+``repro.roofline.analysis`` and are appended when available.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        fusion_bench, kernel_bench, paper_fig3, paper_table1, paper_table2,
+        subdiv_sweep,
+    )
+
+    print("name,us_per_call,derived")
+    benches = [
+        ("table1", paper_table1.run),
+        ("table2", paper_table2.run),
+        ("fig3", paper_fig3.run),
+        ("subdiv_sweep", subdiv_sweep.run),
+        ("fusion", fusion_bench.run),
+        ("kernel", kernel_bench.run),
+    ]
+    failures = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, e))
+            print(f"{name}.ERROR,0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+    results_dir = os.environ.get("REPRO_RESULTS", "results")
+    if os.path.isdir(results_dir):
+        try:
+            from repro.roofline.analysis import analyze_all
+
+            rows = analyze_all(results_dir)
+            ok = [r for r in rows if r["status"] == "ok"]
+            for r in ok:
+                name = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+                bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+                print(
+                    f"{name},{bound*1e6:.1f},"
+                    f"dominant={r['dominant']};frac={r.get('roofline_fraction', 0):.2f}"
+                )
+        except Exception as e:
+            print(f"roofline.ERROR,0,{type(e).__name__}:{e}")
+
+    if failures:
+        raise SystemExit(f"{len(failures)} bench(es) failed: "
+                         f"{[n for n, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Render the dry-run + roofline tables into EXPERIMENTS.md.
+
+Replaces the <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> markers
+(content between marker and the next section heading is regenerated).
+
+  PYTHONPATH=src python scripts/update_experiments.py --results results
+"""
+
+import argparse
+import json
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.analysis import analyze_all, markdown_table  # noqa: E402
+
+
+def dryrun_table(rows):
+    lines = [
+        "| arch | shape | mesh | status | step | compile_s | peak GiB "
+        "| HLO flops/dev | collective B/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped "
+                f"({r['reason'].split('(')[0].strip()}) | — | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | "
+                f"— | — | — | — |"
+            )
+            continue
+        peak = r["memory"].get("peak_memory_in_bytes", 0) / 2**30
+        lines.append(
+            "| {arch} | {shape} | {mesh} | ok | {step} | {cs} | {pk:.2f} | "
+            "{fl:.3g} | {cb:.3g} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                step=r["step"].replace("_step", ""),
+                cs=r.get("compile_s", 0), pk=peak,
+                fl=r["parsed"]["dot_flops"] if "parsed" in r else r["flops"],
+                cb=r.get("collective_bytes",
+                         r.get("parsed", {}).get("collective_bytes", 0)),
+            )
+        )
+    return "\n".join(lines)
+
+
+def splice(text, marker, content):
+    pattern = re.compile(
+        rf"(<!-- {marker} -->).*?(?=\n## |\Z)", re.DOTALL
+    )
+    return pattern.sub(rf"\1\n\n{content}\n", text)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--file", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    rows = analyze_all(args.results)
+    text = open(args.file).read()
+    text = splice(text, "DRYRUN_TABLE", dryrun_table(rows))
+    text = splice(text, "ROOFLINE_TABLE", markdown_table(rows))
+    open(args.file, "w").write(text)
+    print(f"updated {args.file} with {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

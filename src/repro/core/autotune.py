@@ -1,0 +1,127 @@
+"""Autotuning: enumerate variants, early-cut with the cost model, pick one.
+
+This is the paper's §4 pipeline made automatic:
+  1. enumerate HoF orderings (SJT) and subdivision factors,
+  2. rank with the analytic cost model (the early-cut rule the paper's
+     Future Work calls for),
+  3. (optionally) measure the survivors,
+  4. emit the winner as a Schedule for ops/kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost import TPU, cpu_cost, rank_variants, tpu_cost
+from .enumerate import ContractionSpec, variant_orders
+from .execute import execute_variant
+
+
+@dataclasses.dataclass
+class TunedVariant:
+    order: Tuple[str, ...]
+    spec: ContractionSpec
+    predicted_cost: float
+    measured_s: Optional[float] = None
+
+
+def enumerate_subdivided(
+    spec: ContractionSpec,
+    subdiv_candidates: Dict[str, Sequence[int]],
+) -> List[ContractionSpec]:
+    """spec plus every single- and double-index subdivision combination."""
+    specs = [spec]
+    idxs = list(subdiv_candidates)
+    for i, idx in enumerate(idxs):
+        for b in subdiv_candidates[idx]:
+            if spec.extents[idx] % b:
+                continue
+            s1 = spec.subdivide(idx, b)
+            specs.append(s1)
+            for idx2 in idxs[i + 1 :]:
+                for b2 in subdiv_candidates[idx2]:
+                    if s1.extents[idx2] % b2:
+                        continue
+                    specs.append(s1.subdivide(idx2, b2))
+    return specs
+
+
+def tune(
+    spec: ContractionSpec,
+    subdiv_candidates: Optional[Dict[str, Sequence[int]]] = None,
+    cost_fn: Callable = cpu_cost,
+    keep: int = 4,
+    measure_with: Optional[Dict[str, np.ndarray]] = None,
+    repeats: int = 3,
+) -> List[TunedVariant]:
+    """Full enumerate -> cut -> (measure) pipeline; best variant first."""
+    specs = (
+        enumerate_subdivided(spec, subdiv_candidates)
+        if subdiv_candidates
+        else [spec]
+    )
+    pool: List[TunedVariant] = []
+    for s in specs:
+        for cost, order in rank_variants(s, variant_orders(s), cost_fn):
+            pool.append(TunedVariant(order, s, cost))
+    pool.sort(key=lambda tv: tv.predicted_cost)
+    survivors = pool[:keep]
+    if measure_with is not None:
+        for tv in survivors:
+            best = math.inf
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                execute_variant(tv.spec, tv.order, measure_with)
+                best = min(best, time.perf_counter() - t0)
+            tv.measured_s = best
+        survivors.sort(key=lambda tv: tv.measured_s)
+    return survivors
+
+
+# ---------------------------------------------------------------------------
+# TPU block-shape selection for the Pallas matmul
+# ---------------------------------------------------------------------------
+
+
+def choose_matmul_blocks(
+    m: int,
+    n: int,
+    k: int,
+    elem_bytes: int = 2,
+    hw: dict = TPU,
+    double_buffer: bool = True,
+) -> Tuple[int, int, int]:
+    """(block_m, block_n, block_k) minimizing HBM traffic under VMEM.
+
+    Napkin model (the TPU analogue of the paper's cache reasoning):
+      traffic = M*K * (N/bn)  +  K*N * (M/bm)  +  M*N
+    so we maximize bm, bn subject to
+      (bm*bk + bk*bn + bm*bn) * elem * (2 if double_buffer) <= VMEM
+    with every extent a multiple of the MXU tile where possible.
+    """
+    budget = hw["vmem_bytes"] // (2 if double_buffer else 1) // elem_bytes
+
+    def aligned(x: int, size: int) -> List[int]:
+        outs = [c for c in (128, 256, 512, 1024) if c <= size and size % c == 0]
+        return outs or [size]
+
+    best, best_traffic = None, math.inf
+    for bm in aligned(8, m):
+        for bn in aligned(128, n):
+            for bk in aligned(128, k):
+                if bm * bk + bk * bn + bm * bn > budget:
+                    continue
+                traffic = m * k * (n / bn) + k * n * (m / bm) + m * n
+                # prefer deeper k-blocks on ties (fewer grid steps)
+                score = (traffic, -bk, -(bm * bn))
+                if score < (best_traffic, 0, 0) or best is None:
+                    if traffic < best_traffic or best is None:
+                        best, best_traffic = (bm, bn, bk), traffic
+    if best is None:  # tiny problem: single block
+        best = (m, n, k)
+    return best

@@ -1,0 +1,389 @@
+"""Enumeration of HoF-nest rearrangements — paper §4.
+
+A dense contraction (matmul, matvec, the weighted variants of eqs 1-2, 6-7)
+is described by a ``ContractionSpec``: operands with named indices, output
+indices (map dims), and reduced indices (rnz dims).  A *variant* is an
+ordering of the loop indices (the paper's "HoF order from left to right is
+the nesting from top down") plus optional subdivisions of indices.
+
+``sjt`` enumerates orderings by adjacent transpositions
+(Steinhaus–Johnson–Trotter, refs [16][17] of the paper) — each neighbouring
+variant differs by exactly one application of an exchange rule from
+``rules.py`` (map/map, map/rnz, or rnz/rnz), which is how the paper justifies
+the walk.  ``nest_to_expr`` emits the DSL expression for a variant, with the
+operand ``Subdiv``/``Flip`` prefix required by the exchange rules ("exchanging
+two nested higher order functions must be done with an appropriate flip in
+the subdivision structure").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from . import expr as E
+from .expr import App, Flip, Lam, MapN, Prim, RNZ, Subdiv, Var, fresh
+
+
+# ---------------------------------------------------------------------------
+# Steinhaus–Johnson–Trotter
+# ---------------------------------------------------------------------------
+
+
+def sjt(n: int) -> Iterator[Tuple[int, ...]]:
+    """All permutations of range(n) by adjacent transpositions."""
+    perm = list(range(n))
+    dirs = [-1] * n  # all point left initially
+    yield tuple(perm)
+    while True:
+        # largest mobile element
+        mobile_idx = -1
+        for i in range(n):
+            j = i + dirs[i]
+            if 0 <= j < n and perm[i] > perm[j]:
+                if mobile_idx == -1 or perm[i] > perm[mobile_idx]:
+                    mobile_idx = i
+        if mobile_idx == -1:
+            return
+        j = mobile_idx + dirs[mobile_idx]
+        perm[mobile_idx], perm[j] = perm[j], perm[mobile_idx]
+        dirs[mobile_idx], dirs[j] = dirs[j], dirs[mobile_idx]
+        moved = perm[j]
+        for i in range(n):
+            if perm[i] > moved:
+                dirs[i] = -dirs[i]
+        yield tuple(perm)
+
+
+# ---------------------------------------------------------------------------
+# contraction specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionSpec:
+    """An einsum-like dense contraction expressed over named indices."""
+
+    name: str
+    operands: Dict[str, Tuple[str, ...]]  # operand -> indices, outermost-first
+    output: Tuple[str, ...]
+    extents: Dict[str, int]
+    reducer: str = "+"
+    #: builds the innermost scalar expr from {operand: scalar Expr}
+    scalar: Callable[[Dict[str, E.Expr]], E.Expr] = None  # type: ignore
+    #: subdivision provenance: this spec = parent with `split` index subdivided
+    parent: "ContractionSpec" = None  # type: ignore
+    split: Tuple[str, int] = None  # type: ignore
+
+    def __post_init__(self):
+        if self.scalar is None:
+            object.__setattr__(self, "scalar", _product_scalar)
+
+    @property
+    def indices(self) -> Tuple[str, ...]:
+        seen: List[str] = []
+        for idxs in self.operands.values():
+            for i in idxs:
+                if i not in seen:
+                    seen.append(i)
+        return tuple(seen)
+
+    @property
+    def reduce_indices(self) -> Tuple[str, ...]:
+        return tuple(i for i in self.indices if i not in self.output)
+
+    def kind(self, index: str) -> str:
+        return "map" if index in self.output else "rnz"
+
+    def flops(self) -> int:
+        # one multiply-chain + one add per innermost point
+        muls = max(len(self.operands) - 1, 1)
+        pts = math.prod(self.extents[i] for i in self.indices)
+        return pts * (muls + (1 if self.reduce_indices else 0))
+
+    def subdivide(self, index: str, b: int) -> "ContractionSpec":
+        """Split ``index`` into (index_o, index_i) blocks — the paper's subdiv."""
+        e = self.extents[index]
+        if e % b:
+            raise ValueError(f"{b} does not divide extent {e} of {index}")
+        io, ii = index + "o", index + "i"
+
+        def expand(idxs: Tuple[str, ...]) -> Tuple[str, ...]:
+            out: List[str] = []
+            for i in idxs:
+                out.extend((io, ii) if i == index else (i,))
+            return tuple(out)
+
+        extents = dict(self.extents)
+        del extents[index]
+        extents[io], extents[ii] = e // b, b
+        return ContractionSpec(
+            name=self.name,
+            operands={k: expand(v) for k, v in self.operands.items()},
+            output=expand(self.output),
+            extents=extents,
+            reducer=self.reducer,
+            scalar=self.scalar,
+            parent=self,
+            split=(index, b),
+        )
+
+    def split_chain(self) -> List[Tuple[str, int]]:
+        """Subdivisions applied to reach this spec, outermost application first."""
+        chain: List[Tuple[str, int]] = []
+        node = self
+        while node.parent is not None:
+            chain.append(node.split)
+            node = node.parent
+        return list(reversed(chain))
+
+    def root(self) -> "ContractionSpec":
+        node = self
+        while node.parent is not None:
+            node = node.parent
+        return node
+
+
+def _product_scalar(elems: Dict[str, E.Expr]) -> E.Expr:
+    out = None
+    for e in elems.values():
+        out = e if out is None else App(Prim("*"), (out, e))
+    return out
+
+
+# canonical specs used by the paper -------------------------------------------
+
+
+def matmul_spec(n: int, m: int, k: int) -> ContractionSpec:
+    """C_ik = sum_j A_ij B_jk (paper eq 50); B stored row-major (j,k)."""
+    return ContractionSpec(
+        name="matmul",
+        operands={"A": ("i", "j"), "B": ("j", "k")},
+        output=("i", "k"),
+        extents={"i": n, "j": m, "k": k},
+    )
+
+
+def matvec_spec(n: int, m: int) -> ContractionSpec:
+    """v_i = sum_j A_ij u_j (paper eq 38)."""
+    return ContractionSpec(
+        name="matvec",
+        operands={"A": ("i", "j"), "u": ("j",)},
+        output=("i",),
+        extents={"i": n, "j": m},
+    )
+
+
+def weighted_matmul_spec(n: int, m: int, k: int) -> ContractionSpec:
+    """C_ik = sum_j A_ij B_jk g_j (paper eq 2/6)."""
+    return ContractionSpec(
+        name="weighted_matmul",
+        operands={"A": ("i", "j"), "B": ("j", "k"), "g": ("j",)},
+        output=("i", "k"),
+        extents={"i": n, "j": m, "k": k},
+    )
+
+
+def tensor_contraction_spec(n: int, m: int, k: int, p: int, q: int) -> ContractionSpec:
+    """C_ipq = sum_jk A_ijk B_jp C_kq g_j f_k (paper eq 7, PDE-style)."""
+    return ContractionSpec(
+        name="pde_contraction",
+        operands={
+            "A": ("i", "j", "k"),
+            "B": ("j", "p"),
+            "C": ("k", "q"),
+            "g": ("j",),
+            "f": ("k",),
+        },
+        output=("i", "p", "q"),
+        extents={"i": n, "j": m, "k": k, "p": p, "q": q},
+    )
+
+
+# ---------------------------------------------------------------------------
+# variant -> DSL expression
+# ---------------------------------------------------------------------------
+
+
+def _operand_expr(
+    spec: ContractionSpec, name: str, order: Sequence[str]
+) -> Tuple[E.Expr, Tuple[str, ...]]:
+    """Wrap Var(name) in the Subdiv/Flip prefix required by variant ``order``.
+
+    The actual input array is the *root* (unsubdivided) operand; this emits
+    the paper's subdiv ops to realize every split that touches this operand,
+    then Flips to sort its axes into loop-order (outermost first).
+    Returns (expr, final axis order).
+    """
+    axes = list(spec.root().operands[name])
+    e: E.Expr = Var(name)
+    for index, b in spec.split_chain():
+        if index not in axes:
+            continue
+        p = axes.index(index)  # outermost-first position
+        d = len(axes) - 1 - p  # innermost-first dim
+        e = Subdiv(d, b, e)
+        axes[p : p + 1] = [index + "o", index + "i"]
+    assert tuple(sorted(axes, key=order.index)) == tuple(
+        sorted(spec.operands[name], key=order.index)
+    )
+    idxs = tuple(axes)
+    target = tuple(sorted(idxs, key=order.index))
+    rank = len(axes)
+    # selection sort, emitting a Flip per swap (dims innermost-first)
+    for pos in range(rank):
+        want = target[pos]
+        cur = axes.index(want)
+        if cur != pos:
+            d1 = rank - 1 - pos
+            d2 = rank - 1 - cur
+            e = Flip(min(d1, d2), max(d1, d2), e)
+            axes[pos], axes[cur] = axes[cur], axes[pos]
+    return e, target
+
+
+def lift_n(r: E.Expr, n: int) -> E.Expr:
+    for _ in range(n):
+        r = E.lift(r)
+    return r
+
+
+def nest_to_expr(spec: ContractionSpec, order: Sequence[str]) -> E.Expr:
+    """Build the DSL expression for loop ordering ``order`` (outer -> inner)."""
+    assert set(order) == set(spec.indices), (order, spec.indices)
+
+    # live operand expressions + their remaining axis lists
+    live: Dict[str, E.Expr] = {}
+    remaining: Dict[str, List[str]] = {}
+    for name in spec.operands:
+        expr_, axes = _operand_expr(spec, name, order)
+        live[name] = expr_
+        remaining[name] = list(axes)
+
+    def build(k: int) -> E.Expr:
+        if k == len(order):
+            return spec.scalar({n: live[n] for n in spec.operands})
+        idx = order[k]
+        involved = [n for n in spec.operands if remaining[n] and remaining[n][0] == idx]
+        if not involved:
+            return build(k + 1)
+        params, saved = [], {}
+        for n in involved:
+            p = fresh(n.lower())
+            params.append(p)
+            saved[n] = (live[n], remaining[n])
+            live[n] = Var(p)
+            remaining[n] = remaining[n][1:]
+        body = build(k + 1)
+        args = tuple(saved[n][0] for n in involved)
+        if spec.kind(idx) == "map":
+            out: E.Expr = MapN(Lam(tuple(params), body), args)
+        else:
+            maps_below = sum(
+                1 for j in order[k + 1 :] if spec.kind(j) == "map"
+            )
+            reducer = lift_n(Prim(spec.reducer), maps_below)
+            out = RNZ(reducer, Lam(tuple(params), body), args)
+        for n in involved:
+            live[n], remaining[n] = saved[n]
+        return out
+
+    return build(0)
+
+
+def output_axis_order(spec: ContractionSpec, order: Sequence[str]) -> Tuple[str, ...]:
+    """Axis order (outermost-first) of the result produced by nest_to_expr."""
+    return tuple(i for i in order if spec.kind(i) == "map")
+
+
+def evaluate_variant(
+    spec: ContractionSpec, order: Sequence[str], arrays: Dict[str, np.ndarray]
+) -> np.ndarray:
+    """Interpret the variant and canonicalize the output to spec.output order."""
+    from .interp import run
+
+    out = np.asarray(run(nest_to_expr(spec, order), **arrays))
+    produced = output_axis_order(spec, order)
+    perm = tuple(produced.index(i) for i in spec.output)
+    out = np.transpose(out, perm)
+    # merge split output axes back (outer,inner are adjacent in spec.output)
+    root_shape = tuple(
+        spec.root().extents[i] for i in spec.root().output
+    )
+    return out.reshape(root_shape)
+
+
+def variant_orders(
+    spec: ContractionSpec, dedup_rnz: bool = True
+) -> List[Tuple[str, ...]]:
+    """All loop orderings via SJT.
+
+    ``dedup_rnz`` treats equal-reducer rnz dims of the *same split index
+    chain* order-insensitively only when adjacent blocks — the paper keeps
+    12 cases for the subdivided matmul because the two rnzs are
+    indistinguishable; we dedup orders that differ only by relabeling of
+    split siblings at the same nesting relation (jo must stay outside ji).
+    """
+    idxs = spec.indices
+    seen = set()
+    out: List[Tuple[str, ...]] = []
+    for perm in sjt(len(idxs)):
+        order = tuple(idxs[p] for p in perm)
+        # block-split sanity: an outer split index must nest outside its inner
+        ok = True
+        for i in idxs:
+            if i.endswith("o") and i[:-1] + "i" in idxs:
+                if order.index(i) > order.index(i[:-1] + "i"):
+                    ok = False
+                    break
+        if not ok:
+            continue
+        key = order
+        if dedup_rnz:
+            # canonical label: positions of rnz dims as a multiset pattern
+            key = tuple(
+                ("R" if spec.kind(i) == "rnz" else i) for i in order
+            )
+            # distinguish which operands each rnz index touches
+            key = tuple(
+                (
+                    k
+                    if k != "R"
+                    else "R:" + ",".join(sorted(
+                        n for n, ax in spec.operands.items() if order[pos] in ax
+                    ))
+                )
+                for pos, k in enumerate(key)
+            )
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(order)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule-driven derivation (the Fig-3 six matvec forms)
+# ---------------------------------------------------------------------------
+
+
+def paper_fig3_variants(n: int, m: int, b: int):
+    """The six matvec rearrangements of paper Fig 3, as (label, order, spec).
+
+    1a/1b/1c subdivide the reduction (vector) index j; 2a/2b/2c subdivide the
+    map index i.  Orders are the nestings shown in the figure.
+    """
+    base = matvec_spec(n, m)
+    s1 = base.subdivide("j", b)  # jo, ji
+    s2 = base.subdivide("i", b)  # io, ii
+    return [
+        ("1a", ("i", "jo", "ji"), s1),
+        ("1b", ("jo", "i", "ji"), s1),
+        ("1c", ("jo", "ji", "i"), s1),
+        ("2a", ("j", "io", "ii"), s2),
+        ("2b", ("io", "j", "ii"), s2),
+        ("2c", ("io", "ii", "j"), s2),
+    ]

@@ -1,0 +1,72 @@
+"""Deterministic synthetic data pipeline with per-host sharding.
+
+Every batch is a pure function of (seed, step, host) — no filesystem, no
+coordination, bit-reproducible across restarts.  That determinism is load-
+bearing for fault tolerance: after a restore to step N, host h regenerates
+exactly the batch it would have seen, so data order survives crashes and
+elastic resizes (the host count enters the hash, and the global batch is
+carved by host *rank range*, not modulo, so growing hosts re-partitions
+cleanly).
+
+The token stream is Zipf-distributed with a deterministic per-document
+structure, which is enough signal for the loss to fall measurably within a
+few hundred steps of the example trainer (examples/train_100m.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def _rng_for(cfg: DataConfig, step: int, sample: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, sample])
+    )
+
+
+def _sample_doc(rng: np.random.Generator, cfg: DataConfig, length: int):
+    # zipf over the vocab with a deterministic "grammar": token t is followed
+    # by (t*7+3) % vocab with prob .5 — gives the LM something learnable.
+    toks = np.minimum(
+        rng.zipf(cfg.zipf_a, size=length) - 1, cfg.vocab - 1
+    ).astype(np.int32)
+    follow = (toks * 7 + 3) % cfg.vocab
+    coin = rng.random(length) < 0.5
+    toks[1:] = np.where(coin[1:], follow[:-1], toks[1:])
+    return toks
+
+
+def host_batch_slice(cfg: DataConfig) -> range:
+    per = cfg.global_batch // cfg.n_hosts
+    return range(cfg.host_id * per, (cfg.host_id + 1) * per)
+
+
+def batch_at(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """The host's shard of the global batch for ``step``."""
+    rows = []
+    for sample in host_batch_slice(cfg):
+        rng = _rng_for(cfg, step, sample)
+        rows.append(_sample_doc(rng, cfg, cfg.seq_len + 1))
+    arr = np.stack(rows)
+    return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+
+def iterate(cfg: DataConfig, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield batch_at(cfg, step)
+        step += 1

@@ -1,0 +1,7 @@
+"""TPU Pallas kernels for the paper's compute hot-spots.
+
+Each kernel directory holds:
+  <name>.py  -- pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     -- jit'd public wrapper (TPU: Pallas; CPU: lax fallback)
+  ref.py     -- pure-jnp oracle used by the allclose tests
+"""

@@ -1,0 +1,39 @@
+"""Jit'd wrapper for the fused dense+norm+activation kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ...core.autotune import choose_matmul_blocks
+from .fused_dense_act import fused_dense_act_pallas
+from .ref import fused_dense_act_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "eps", "block_b", "block_k", "block_i", "interpret"),
+)
+def fused_dense_act(
+    x, w, beta, mean, var,
+    *, act: str = "gelu", eps: float = 1e-5,
+    block_b: int | None = None,
+    block_k: int | None = None,
+    block_i: int | None = None,
+    interpret: bool = False,
+):
+    if not interpret and jax.default_backend() != "tpu":
+        return fused_dense_act_ref(x, w, beta, mean, var, act=act, eps=eps)
+    b, i = x.shape
+    _, k = w.shape
+    if block_b is None or block_k is None or block_i is None:
+        bb, bk, bi = choose_matmul_blocks(b, k, i, elem_bytes=x.dtype.itemsize)
+        block_b, block_k, block_i = (
+            block_b or bb, block_k or bk, block_i or bi
+        )
+    return fused_dense_act_pallas(
+        x, w, beta, mean, var, act=act, eps=eps,
+        block_b=block_b, block_k=block_k, block_i=block_i,
+        interpret=interpret,
+    )

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for fused dense + norm + activation (paper eqs 3-5)."""
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = {
+    "relu": lambda z: jnp.maximum(z, 0.0),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "id": lambda z: z,
+}
+
+
+def fused_dense_act_ref(x, w, beta, mean, var, *, act="gelu", eps=1e-5,
+                        out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    y = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + beta.astype(jnp.float32)[None, :]
+    z = (y - mean.astype(jnp.float32)[None, :]) * jax.lax.rsqrt(
+        var.astype(jnp.float32)[None, :] + eps
+    )
+    return _ACTIVATIONS[act](z).astype(out_dtype)

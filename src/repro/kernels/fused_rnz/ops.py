@@ -1,0 +1,40 @@
+"""Jit'd wrapper for the fused weighted contraction kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ...core.autotune import choose_matmul_blocks
+from .fused_rnz import weighted_matmul_pallas
+from .ref import weighted_matmul_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def weighted_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    g: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    if not interpret and jax.default_backend() != "tpu":
+        return weighted_matmul_ref(a, b, g)
+    m, k = a.shape
+    _, n = b.shape
+    if block_m is None or block_n is None or block_k is None:
+        bm, bn, bk = choose_matmul_blocks(m, n, k, elem_bytes=a.dtype.itemsize)
+        block_m, block_n, block_k = (
+            block_m or bm, block_n or bn, block_k or bk
+        )
+    return weighted_matmul_pallas(
+        a, b, g,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused weighted contraction (paper eq 2)."""
+
+import jax.numpy as jnp
+
+
+def weighted_matmul_ref(a, b, g, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    # same contract as the kernel: the zipper (a*g) runs in the input dtype
+    # (it rides the VMEM block), accumulation happens in float32 on the MXU.
+    scaled = a * g[None, :]
+    return jnp.dot(
+        scaled, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

@@ -1,0 +1,58 @@
+"""Jit'd public wrapper for the blocked matmul kernel.
+
+Routing policy (see DESIGN.md): on TPU backends the Pallas kernel runs with
+autotuned block shapes; elsewhere (CPU container, dry-run) we fall back to
+``lax.dot_general`` so the surrounding program still lowers/compiles, while
+tests exercise the kernel body via ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.autotune import choose_matmul_blocks
+from .matmul import matmul_pallas
+from .ref import matmul_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "force_pallas"),
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = False,
+    force_pallas: bool = False,
+) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    use_pallas = force_pallas or interpret or _on_tpu()
+    if not use_pallas:
+        return matmul_ref(a, b)
+    if block_m is None or block_n is None or block_k is None:
+        bm, bn, bk = choose_matmul_blocks(
+            m, n, k, elem_bytes=a.dtype.itemsize
+        )
+        block_m, block_n, block_k = (
+            block_m or bm, block_n or bn, block_k or bk
+        )
+    return matmul_pallas(
+        a, b,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )

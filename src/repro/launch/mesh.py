@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Shapes per the deliverable:
+
+  single pod : (data=16, model=16)              -- 256 chips
+  multi-pod  : (pod=2, data=16, model=16)       -- 512 chips
+
+The ``pod`` axis is hierarchical data parallelism by default: gradients
+reduce-scatter in-pod over ICI and cross pods over DCI (optionally int8-
+compressed, see optim.compress); switching it to a pipeline axis is a
+config choice in launch.train.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires >= prod(shape) local devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carve the global batch (pod+data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,97 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""§Perf harness: compile ONE cell under a named knob combination and report
+the roofline-term deltas against the baseline record.
+
+Knobs (combinable via --knob a,b):
+  baseline        no overrides (the paper-faithful configuration)
+  remat_dots      REPRO_REMAT_POLICY=dots  (save matmul outputs in fwd)
+  dp              REPRO_SHARDING=dp        (no TP; batch over all axes)
+  zero1           REPRO_SHARDING=zero1 + int8 moments (no FSDP param gather)
+  moe_constraint  REPRO_MOE_CONSTRAINT=1   (pin dispatch to EP layout)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch qwen2-72b \
+      --shape train_4k --knob zero1 --out results_perf
+"""
+
+import argparse
+import json
+
+_KNOB_ENV = {
+    "baseline": {},
+    "remat_dots": {"REPRO_REMAT_POLICY": "dots"},
+    "dp": {"REPRO_SHARDING": "dp"},
+    "zero1": {"REPRO_SHARDING": "zero1", "REPRO_OPT_INT8": "1"},
+    "moe_constraint": {"REPRO_MOE_CONSTRAINT": "1"},
+    "unembed": {"REPRO_UNEMBED_FIX": "1"},
+    "donate": {"REPRO_DONATE": "1"},
+    "causal_skip": {"REPRO_CAUSAL_SKIP": "1"},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--knob", default="baseline",
+                    help="comma-separated knob names")
+    ap.add_argument("--out", default="results_perf")
+    ap.add_argument("--baseline-dir", default="results")
+    args = ap.parse_args()
+
+    knobs = args.knob.split(",")
+    for k in knobs:
+        for env, val in _KNOB_ENV[k].items():
+            os.environ[env] = val
+
+    from .dryrun import run_cell  # import AFTER env is set
+    from ..roofline.analysis import analyze_cell, param_counts
+
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.mesh}__{'+'.join(knobs)}"
+    rec = run_cell(
+        args.arch, args.shape, args.mesh == "multipod",
+        hlo_dir=os.path.join(args.out, "hlo"),
+    )
+    rec["knobs"] = knobs
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+    counts = param_counts(args.arch)
+    row = analyze_cell(rec, counts)
+    print(f"\n=== {tag}: {rec['status']} ===")
+    if rec["status"] != "ok":
+        print(rec.get("error"))
+        return
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "useful_ratio", "roofline_fraction"):
+        print(f"  {k:20s} {row[k]}")
+    print(f"  peak_memory_GiB      "
+          f"{rec['memory'].get('peak_memory_in_bytes', 0)/2**30:.2f}")
+
+    # delta vs the baseline sweep record
+    base_path = os.path.join(
+        args.baseline_dir,
+        f"{args.arch}__{args.shape}__"
+        f"{'mp' if args.mesh == 'multipod' else 'sp'}.json",
+    )
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = analyze_cell(json.load(f), counts)
+        if base["status"] == "ok":
+            print("  --- vs baseline ---")
+            for k in ("compute_s", "memory_s", "collective_s"):
+                b, n = base[k], row[k]
+                print(f"  {k:20s} {b:.4g} -> {n:.4g} "
+                      f"({(n/b - 1)*100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

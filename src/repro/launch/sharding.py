@@ -1,0 +1,188 @@
+"""Logical-axis -> mesh-axis sharding rules (the distributed subdiv level).
+
+A parameter annotated ``('embed', 'mlp')`` becomes, on the production mesh,
+``PartitionSpec('data', 'model')`` — i.e. FSDP over the data axis and tensor
+parallelism over the model axis.  In the paper's vocabulary this is exactly
+``subdiv`` applied at the outermost hierarchy level, with the mesh axis bound
+to the new outer dimension (DESIGN.md §2).
+
+Rules are *preference lists*; an axis is taken only if it divides the dim
+(e.g. whisper's vocab 51865 is not divisible by 16 -> the unembed stays
+replicated; mamba2's in_proj fused dim 3352 likewise).  The chosen spec is
+therefore always valid on the target mesh — no silent GSPMD fallbacks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: logical axis -> ordered mesh-axis preferences (the default "tp" profile)
+PARAM_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "vocab": (("model",),),
+    "embed": (("data",),),          # FSDP
+    "heads": (("model",),),         # TP over (flattened) attention heads
+    "kv": (("model",),),
+    "mlp": (("model",),),           # TP over FFN hidden
+    "experts": (("model",), ("data",)),  # EP; kimi's 384 also splits on data
+    "layers": (),                   # scan axis: never sharded
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (("model",),),           # SP for sequence-sharded activations
+    "seq_kv": (("model",), ("data",)),  # KV-cache sequence dim (long context)
+}
+
+#: "dp" profile — no tensor parallelism: the model axis joins data
+#: parallelism and weights are FSDP-sharded over both axes.  This is the
+#: distribution-level analogue of the paper's flip exchange: instead of
+#: subdividing the feature dims across chips (TP), subdivide the batch.
+#: Wins for small-d_model archs where per-layer TP all-reduces dwarf compute.
+DP_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "vocab": (("model",),),
+    "embed": (("data",),),
+    "heads": (),
+    "kv": (),
+    "mlp": (),
+    "experts": (("model",), ("data",)),  # EP stays: MoE without EP can't fit
+    "layers": (),
+    "batch": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "seq": (("model",),),
+    "seq_kv": (("model",), ("data",)),
+}
+
+#: "zero1" profile — params live TP-sharded only (no per-layer FSDP
+#: all-gather of the stacked weights inside the scan); the memory cost is
+#: paid back by 8-bit optimizer moments whose flat blocks shard over the
+#: whole mesh (steps.opt_shardings).  The §Perf lever for the
+#: gather-inside-scan pathology visible in the baseline HLO.
+ZERO1_RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = dict(
+    PARAM_RULES, embed=(), vocab=(("model",), ("data",)),
+)
+
+PROFILES = {"tp": PARAM_RULES, "dp": DP_RULES, "zero1": ZERO1_RULES}
+
+
+def active_rules() -> Dict[str, Tuple[Tuple[str, ...], ...]]:
+    """Rules for the profile in $REPRO_SHARDING (default 'tp').
+
+    The env knob exists so the dry-run / §Perf harness can A/B sharding
+    variants without touching code (EXPERIMENTS.md §Perf).
+    """
+    import os
+
+    return PROFILES[os.environ.get("REPRO_SHARDING", "tp")]
+
+
+def _mesh_size(mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for(
+    mesh,
+    logical: Optional[Tuple[Optional[str], ...]],
+    dims: Tuple[int, ...],
+    rules: Optional[Dict] = None,
+) -> P:
+    """PartitionSpec for one array given its logical axes and shape."""
+    if rules is None:
+        rules = active_rules()
+    if logical is None:
+        return P()
+    assert len(logical) == len(dims), (logical, dims)
+    used: set = set()
+    parts: list = [None] * len(dims)
+
+    def try_assign(i, name, dim):
+        for pref in rules.get(name, ()) if name else ():
+            axes = tuple(a for a in pref if a in mesh.axis_names)
+            if not axes or any(a in used for a in axes):
+                continue
+            if dim % _mesh_size(mesh, axes) == 0:
+                parts[i] = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                return
+
+    # §Perf knob (EXPERIMENTS.md): FSDP-sharding the unembed's contraction
+    # dim makes GSPMD shard the contraction itself, materializing a
+    # replicated-token f32 logits partial plus a giant all-reduce (found by
+    # HLO inspection of the baseline).  The fix keeps the unembed sharded
+    # over vocab only.
+    import os
+
+    if (
+        os.environ.get("REPRO_UNEMBED_FIX") == "1"
+        and "vocab" in logical
+        and "embed" in logical
+    ):
+        logical = tuple(
+            None if name == "embed" else name for name in logical
+        )
+
+    # two passes: structural dims (heads/kv/experts/...) get first pick of
+    # the mesh axes; sequence dims only take what is left (they are the
+    # fallback for long-context cells, not the default)
+    fallback = {"seq", "seq_kv"}
+    for i, (name, dim) in enumerate(zip(logical, dims)):
+        if name not in fallback:
+            try_assign(i, name, dim)
+    for i, (name, dim) in enumerate(zip(logical, dims)):
+        if name in fallback:
+            try_assign(i, name, dim)
+    # trailing Nones are implicit
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(mesh, shapes_tree, axes_tree, rules: Optional[Dict] = None):
+    """NamedSharding tree for a ShapeDtypeStruct tree + logical-axes tree."""
+    if rules is None:
+        rules = active_rules()
+
+    def one(shape_leaf, ax):
+        return NamedSharding(
+            mesh, spec_for(mesh, ax, tuple(shape_leaf.shape), rules)
+        )
+
+    # axes_tree leaves are tuples (or None); walk the shapes tree structure
+    flat_shapes, treedef = jax.tree.flatten(shapes_tree)
+    flat_axes = treedef.flatten_up_to(axes_tree)
+    return treedef.unflatten(
+        [one(s, a) for s, a in zip(flat_shapes, flat_axes)]
+    )
+
+
+def quantized_sharding(mesh, q_shapes):
+    """Sharding for a Quantized optimizer moment: shard the flat block axis
+    over every mesh axis that divides it (this is what lets kimi-k2's 8-bit
+    Adam states spread across all 512 chips)."""
+    nblocks = q_shapes.q.shape[0]
+    axes = [a for a in ("data", "model") if a in mesh.axis_names]
+    good = tuple(
+        a for a in axes if nblocks % _mesh_size(mesh, tuple(axes)) == 0
+    )
+    spec = P(tuple(axes)) if good == tuple(axes) and axes else P()
+    return dict(
+        q=NamedSharding(mesh, spec),
+        scale=NamedSharding(mesh, spec),
+    )
+
+
+def batch_spec_for(mesh, shape: Tuple[int, ...], seq_axis: Optional[int] = None) -> P:
+    """Inputs: shard dim0 (batch) per the active profile's batch rule;
+    fall back to sequence sharding (long_500k's batch=1)."""
+    rules = active_rules()
+    for pref in rules["batch"]:
+        axes = tuple(a for a in pref if a in mesh.axis_names)
+        if not axes:
+            continue
+        if shape[0] % _mesh_size(mesh, axes) == 0:
+            return P(axes if len(axes) > 1 else axes[0])
+    if seq_axis is not None and len(shape) > seq_axis:
+        if shape[seq_axis] % mesh.shape.get("model", 1) == 0:
+            parts: list = [None] * (seq_axis + 1)
+            parts[seq_axis] = "model"
+            return P(*parts)
+    return P()

@@ -1,0 +1,226 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB —
+``input_specs`` feeds precomputed frame embeddings, per the assignment).
+
+LayerNorm + GELU MLP + sinusoidal positions (no rope), cross-attention from
+decoder to encoder output.  Decode caches both the self-attention KV and the
+per-layer cross-attention KV (computed once at prefill).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .layers import F32
+
+
+def sinusoid(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=F32)[:, None]
+    i = jnp.arange(dim // 2, dtype=F32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": L.layernorm_init(cfg),
+        "attn": L.attention_init(ks[0], cfg),
+        "mlp_norm": L.layernorm_init(cfg),
+        "mlp": L.mlp_init(ks[1], cfg),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_norm": L.layernorm_init(cfg),
+        "self_attn": L.attention_init(ks[0], cfg),
+        "cross_norm": L.layernorm_init(cfg),
+        "cross_attn": L.attention_init(ks[1], cfg),
+        "mlp_norm": L.layernorm_init(cfg),
+        "mlp": L.mlp_init(ks[2], cfg),
+    }
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    n_enc = cfg.enc_layers
+    keys = jax.random.split(key, n_enc + cfg.n_layers + 2)
+    tree: Dict = {
+        "embedding": L.embedding_init(keys[0], cfg),
+        "enc_final_norm": L.layernorm_init(cfg),
+        "dec_final_norm": L.layernorm_init(cfg),
+        "enc_layers": L.stack_annotated(
+            [_enc_layer_init(keys[1 + i], cfg) for i in range(n_enc)]
+        ),
+        "dec_layers": L.stack_annotated(
+            [_dec_layer_init(keys[1 + n_enc + i], cfg)
+             for i in range(cfg.n_layers)]
+        ),
+    }
+    params, axes = L.split_params(tree)
+    for k in ("enc_layers", "dec_layers"):
+        axes[k] = jax.tree.map(
+            lambda a: ("layers",) + tuple(a) if isinstance(a, tuple) else a,
+            axes[k],
+            is_leaf=lambda a: isinstance(a, tuple) or a is None,
+        )
+    return params, axes
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array,
+           q_block=512, k_block=512) -> jax.Array:
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    B, S, D = frames.shape
+    x = (frames + sinusoid(S, D)[None]).astype(cfg.param_dtype)
+    positions = jnp.arange(S)[None, :]
+
+    def step(h, lp):
+        z = L.layernorm(lp["attn_norm"], h, cfg.norm_eps)
+        y, _ = L.attention_apply(
+            lp["attn"], cfg, z, positions=positions, causal=False,
+            q_block=q_block, k_block=k_block,
+        )
+        h = h + y
+        z = L.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
+        return h + L.mlp_apply(lp["mlp"], cfg, z), None
+
+    x, _ = lax.scan(step, x, params["enc_layers"])
+    return L.layernorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(lp, cfg: ModelConfig, enc_out):
+    B, T, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = jnp.dot(enc_out, lp["wk"], preferred_element_type=F32).astype(
+        enc_out.dtype).reshape(B, T, kv, hd)
+    v = jnp.dot(enc_out, lp["wv"], preferred_element_type=F32).astype(
+        enc_out.dtype).reshape(B, T, kv, hd)
+    if cfg.qkv_bias:
+        k = k + lp["bk"].reshape(kv, hd)
+        v = v + lp["bv"].reshape(kv, hd)
+    return k, v
+
+
+def _cross_apply(lp, cfg: ModelConfig, x, k, v):
+    B, S, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = jnp.dot(x, lp["wq"], preferred_element_type=F32).astype(
+        x.dtype).reshape(B, S, h, hd)
+    if cfg.qkv_bias:
+        q = q + lp["bq"].reshape(h, hd)
+    y = L.blockwise_attention(q, k, v, causal=False)
+    return jnp.dot(
+        y.reshape(B, S, -1), lp["wo"], preferred_element_type=F32
+    ).astype(x.dtype)
+
+
+def _decoder(params, cfg: ModelConfig, tokens, enc_out=None, caches=None,
+             positions=None, q_block=512, k_block=512, last_only=False):
+    B, S = tokens.shape
+    x = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+        x = x + sinusoid(S, cfg.d_model)[None].astype(x.dtype)
+    else:
+        # per-sequence decode positions, computed directly (no table)
+        d = cfg.d_model
+        i = jnp.arange(d // 2, dtype=F32)[None, :]
+        ang = positions.astype(F32)[..., None] / jnp.power(
+            10_000.0, 2 * i[None] / d
+        )
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe.astype(x.dtype)
+
+    def step(h, xs):
+        lp, lc = xs
+        z = L.layernorm(lp["self_norm"], h, cfg.norm_eps)
+        y, new_self = L.attention_apply(
+            lp["self_attn"], cfg, z, positions=positions,
+            cache=None if lc is None else lc["self"],
+            q_block=q_block, k_block=k_block,
+        )
+        h = h + y
+        z = L.layernorm(lp["cross_norm"], h, cfg.norm_eps)
+        if enc_out is not None:  # train/prefill: compute (and cache) cross KV
+            ck, cv = _cross_kv(lp["cross_attn"], cfg, enc_out)
+        else:  # decode: reuse the prefill-cached cross KV
+            ck, cv = lc["cross_k"], lc["cross_v"]
+        h = h + _cross_apply(lp["cross_attn"], cfg, z, ck, cv)
+        z = L.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
+        h = h + L.mlp_apply(lp["mlp"], cfg, z)
+        nc = None
+        if lc is not None:
+            nc = {"self": new_self, "cross_k": ck, "cross_v": cv}
+        return h, nc
+
+    body = L.remat(step) if (cfg.remat and caches is None) else step
+    x, new_caches = lax.scan(body, x, (params["dec_layers"], caches))
+    if last_only:  # serving: only the next-token distribution is needed
+        x = x[:, -1:]
+    x = L.layernorm(params["dec_final_norm"], x, cfg.norm_eps)
+    return L.logits(params["embedding"], cfg, x), new_caches
+
+
+def forward(params, cfg: ModelConfig, frames, tokens,
+            q_block=512, k_block=512):
+    enc_out = encode(params, cfg, frames, q_block, k_block)
+    logits_, _ = _decoder(
+        params, cfg, tokens, enc_out=enc_out,
+        q_block=q_block, k_block=k_block,
+    )
+    return logits_
+
+
+def loss_fn(params, cfg: ModelConfig, frames, tokens, labels, **kw):
+    return L.cross_entropy(forward(params, cfg, frames, tokens, **kw), labels)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    def one():
+        return {
+            "self": L.attention_cache_init(cfg, batch, max_len),
+            "cross_k": jnp.zeros(
+                (batch, enc_len, cfg.n_kv_heads, cfg.hd), cfg.param_dtype
+            ),
+            "cross_v": jnp.zeros(
+                (batch, enc_len, cfg.n_kv_heads, cfg.hd), cfg.param_dtype
+            ),
+        }
+
+    return jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one() for _ in range(cfg.n_layers)]
+    )
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "self": {k: ("layers",) + tuple(v) for k, v in L.CACHE_AXES.items()},
+        "cross_k": ("layers", "batch", "seq_kv", "kv", None),
+        "cross_v": ("layers", "batch", "seq_kv", "kv", None),
+    }
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, max_len: int):
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    caches = cache_init(cfg, B, max_len, frames.shape[1])
+    # fill cross KV by running the decoder once over the prompt
+    logits_, new_caches = _decoder(
+        params, cfg, tokens, enc_out=enc_out, caches=caches, last_only=True
+    )
+    return logits_, new_caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens):
+    pos = caches["self"]["len"][0]  # (B,)
+    logits_, new_caches = _decoder(
+        params, cfg, tokens, caches=caches, positions=pos[:, None]
+    )
+    return logits_, new_caches

@@ -1,0 +1,182 @@
+"""SSM and hybrid (Zamba2-style) language models.
+
+``family == 'ssm'``    : pure Mamba2 stack (mamba2-130m).
+``family == 'hybrid'`` : Mamba2 backbone with a SHARED attention+MLP block
+applied after every ``cfg.attn_every`` SSM layers (Zamba2's weight-shared
+global block, arXiv:2411.15242).  The shared block's KV cache is per
+*application site*, not per weight copy.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .ssm import SSM_CACHE_AXES, ssm_apply, ssm_cache_init, ssm_init
+
+
+def _n_shared_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    tree: Dict = {
+        "embedding": L.embedding_init(keys[0], cfg),
+        "final_norm": L.rmsnorm_init(cfg),
+    }
+    reps = []
+    for li in range(cfg.n_layers):
+        reps.append({
+            "norm": L.rmsnorm_init(cfg),
+            "ssm": ssm_init(keys[1 + li], cfg),
+        })
+    tree["ssm_layers"] = L.stack_annotated(reps)
+    if cfg.attn_every:
+        tree["shared"] = {
+            "attn_norm": L.rmsnorm_init(cfg),
+            "attn": L.attention_init(keys[-2], cfg),
+            "mlp_norm": L.rmsnorm_init(cfg),
+            "mlp": L.mlp_init(keys[-1], cfg),
+        }
+    params, axes = L.split_params(tree)
+    axes["ssm_layers"] = jax.tree.map(
+        lambda a: ("layers",) + tuple(a) if isinstance(a, tuple) else a,
+        axes["ssm_layers"],
+        is_leaf=lambda a: isinstance(a, tuple) or a is None,
+    )
+    return params, axes
+
+
+def _shared_block(params, cfg: ModelConfig, x, *, positions, cache,
+                  q_block=512, k_block=512):
+    h = L.rmsnorm(params["attn_norm"], x, cfg.norm_eps)
+    y, new_cache = L.attention_apply(
+        params["attn"], cfg, h, positions=positions, cache=cache,
+        q_block=q_block, k_block=k_block,
+    )
+    x = x + y
+    h = L.rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
+    return x + L.mlp_apply(params["mlp"], cfg, h), new_cache
+
+
+def _run(params, cfg: ModelConfig, x, *, positions, caches=None,
+         q_block=512, k_block=512):
+    ae = cfg.attn_every or cfg.n_layers
+    groups = cfg.n_layers // ae if cfg.attn_every else 1
+    new_ssm_caches = []
+    new_attn_caches = []
+
+    def ssm_step(carry, xs):
+        h = carry
+        lp, lc = xs
+        hn = L.rmsnorm(lp["norm"], h, cfg.norm_eps)
+        y, nc = ssm_apply(lp["ssm"], cfg, hn, cache=lc)
+        return h + y, nc
+
+    for g in range(groups):
+        lo, hi = g * ae, min((g + 1) * ae, cfg.n_layers)
+        seg = jax.tree.map(lambda p: p[lo:hi], params["ssm_layers"])
+        seg_cache = (
+            None if caches is None
+            else jax.tree.map(lambda c: c[lo:hi], caches["ssm"])
+        )
+        body = (
+            L.remat(ssm_step)
+            if (cfg.remat and caches is None) else ssm_step
+        )
+        x, seg_new = lax.scan(body, x, (seg, seg_cache))
+        if caches is not None:
+            new_ssm_caches.append(seg_new)
+        if cfg.attn_every:
+            site_cache = (
+                None if caches is None
+                else jax.tree.map(lambda c: c[g], caches["attn"])
+            )
+            x, site_new = _shared_block(
+                params["shared"], cfg, x, positions=positions,
+                cache=site_cache, q_block=q_block, k_block=k_block,
+            )
+            if caches is not None:
+                new_attn_caches.append(site_new)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "ssm": jax.tree.map(
+                lambda *xs: jnp.concatenate(xs), *new_ssm_caches
+            )
+        }
+        if cfg.attn_every:
+            new_caches["attn"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *new_attn_caches
+            )
+    return x, new_caches
+
+
+def forward(params, cfg: ModelConfig, tokens, *, q_block=512, k_block=512):
+    x = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :].astype(jnp.int32)
+    x, _ = _run(params, cfg, x, positions=positions,
+                q_block=q_block, k_block=k_block)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.logits(params["embedding"], cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, **kw):
+    return L.cross_entropy(forward(params, cfg, tokens, **kw), labels)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    caches: Dict = {
+        "ssm": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[ssm_cache_init(cfg, batch) for _ in range(cfg.n_layers)],
+        )
+    }
+    if cfg.attn_every:
+        sites = _n_shared_sites(cfg)
+        caches["attn"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[L.attention_cache_init(cfg, batch, max_len)
+              for _ in range(sites)],
+        )
+    return caches
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    axes: Dict = {
+        "ssm": {k: ("layers",) + tuple(v) for k, v in SSM_CACHE_AXES.items()}
+    }
+    if cfg.attn_every:
+        axes["attn"] = {
+            k: ("layers",) + tuple(v) for k, v in L.CACHE_AXES.items()
+        }
+    return axes
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens):
+    x = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
+    if cfg.attn_every:
+        pos = caches["attn"]["len"][0]  # (B,)
+    else:
+        pos = jnp.zeros((tokens.shape[0],), jnp.int32)
+    positions = pos[:, None]
+    x, new_caches = _run(params, cfg, x, positions=positions, caches=caches)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return L.logits(params["embedding"], cfg, x), new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int):
+    B, S = tokens.shape
+    caches = cache_init(cfg, B, max_len)
+    x = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    x, new_caches = _run(params, cfg, x, positions=positions, caches=caches)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return L.logits(params["embedding"], cfg, x), new_caches

@@ -1,0 +1,129 @@
+"""Token-choice top-k Mixture-of-Experts layer (GShard/Mixtral-style).
+
+Routing uses the sort-based capacity formulation (no dense (tokens x experts
+x capacity) dispatch tensor): tokens are argsorted by expert id, positions
+within each expert group come from a searchsorted over the sorted ids, and
+tokens beyond the per-expert capacity are dropped.  Expert FFNs are batched
+einsums over a stacked (E, D, F) weight — sharding the E axis over the
+``model`` (and ``data``) mesh axes gives expert parallelism; GSPMD inserts
+the dispatch/combine all-to-alls.
+
+Note (DESIGN.md §Arch-applicability): the routing itself (gather/scatter) is
+outside the paper's dense-HoF formalism; the expert FFN contractions inside
+are ordinary ``rnz`` contractions and follow the framework schedule.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import F32, PA, _init, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_ff, m.n_experts
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": _init(ks[0], (d, e), ("embed", "experts"), F32),
+        "w_gate": PA(
+            jax.random.normal(ks[1], (e, d, f), F32).astype(dt) * scale,
+            ("experts", "embed", "mlp"),
+        ),
+        "w_up": PA(
+            jax.random.normal(ks[2], (e, d, f), F32).astype(dt) * scale,
+            ("experts", "embed", "mlp"),
+        ),
+        "w_down": PA(
+            jax.random.normal(ks[3], (e, f, d), F32).astype(dt)
+            / math.sqrt(f),
+            ("experts", "mlp", "embed"),
+        ),
+    }
+    if m.shared_expert_ff:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=m.shared_expert_ff)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * n_tokens * m.top_k / m.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_apply(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    m = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    E, K = m.n_experts, m.top_k
+    C = capacity(cfg, N)
+    xf = x.reshape(N, D)
+
+    router_logits = jnp.dot(
+        xf.astype(F32), params["router"], preferred_element_type=F32
+    )  # (N, E)
+    gate_vals, expert_idx = lax.top_k(router_logits, K)  # (N, K)
+    gate_vals = jax.nn.softmax(gate_vals, axis=-1)
+
+    flat_expert = expert_idx.reshape(-1)  # (N*K,)
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[sort_idx]
+    group_start = jnp.searchsorted(
+        sorted_expert, jnp.arange(E), side="left"
+    )
+    pos_in_group = jnp.arange(N * K) - group_start[sorted_expert]
+    kept = pos_in_group < C
+    slot = jnp.where(kept, sorted_expert * C + pos_in_group, E * C)
+    token = sort_idx // K
+
+    dispatched = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xf[token])
+    h = dispatched[: E * C].reshape(E, C, D)
+
+    # §Perf knob: pin the dispatched tokens to the expert-parallel layout so
+    # GSPMD lowers dispatch/combine to all-to-alls along the expert axis
+    # instead of all-gathering the token buffer (EXPERIMENTS.md §Perf).
+    import os
+    if os.environ.get("REPRO_MOE_CONSTRAINT") == "1":
+        from jax.sharding import PartitionSpec as P
+
+        h = jax.lax.with_sharding_constraint(h, P("model", None, None))
+
+    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"],
+                   preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"],
+                   preferred_element_type=F32)
+    act = (jax.nn.silu(g) * u).astype(x.dtype)
+    out_e = jnp.einsum("ecf,efd->ecd", act, params["w_down"],
+                       preferred_element_type=F32).astype(x.dtype)
+
+    padded = jnp.concatenate(
+        [out_e.reshape(E * C, D), jnp.zeros((1, D), x.dtype)], axis=0
+    )
+    contrib = padded[slot] * gate_vals.reshape(-1)[sort_idx][:, None].astype(
+        x.dtype
+    )
+    out = jnp.zeros((N, D), x.dtype).at[token].add(contrib)
+
+    if "shared" in params:
+        out = out + mlp_apply(
+            params["shared"], cfg, xf.reshape(B, S, D)
+        ).reshape(N, D)
+    return out.reshape(B, S, D)
+
+
+def load_balance_loss(cfg: ModelConfig, router_logits, expert_idx) -> jax.Array:
+    """Switch-style auxiliary loss: mean_prob * mean_assignment per expert."""
+    E = cfg.moe.n_experts
+    probs = jax.nn.softmax(router_logits.astype(F32), axis=-1)
+    me = probs.mean(axis=0)
+    one_hot = jax.nn.one_hot(expert_idx[:, 0], E, dtype=F32)
+    fe = one_hot.mean(axis=0)
+    return E * jnp.sum(me * fe)

@@ -1,0 +1,223 @@
+"""Mamba2 (SSD — state-space duality) blocks, arXiv:2405.21060.
+
+Training path is the chunked SSD algorithm: the sequence is ``subdiv``-ed
+into chunks; intra-chunk terms are dense contractions (which DO route through
+the paper's framework formalism — they are rnz contractions with a decay
+zipper), and inter-chunk terms ride a ``lax.scan`` over chunk states.  The
+data-dependent recurrence itself is outside the paper's static-reducer
+``rnz`` (see DESIGN.md §Arch-applicability).
+
+Decode path is the constant-memory recurrent step on (B, H, P, N) state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .layers import F32, PA, _init, _ones, _zeros
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    conv_dim = d_inner + 2 * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_dim = _dims(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * s.d_state + H  # z, x, B, C, dt
+    p = {
+        "in_proj": _init(ks[0], (d, in_dim), ("embed", "mlp"), dt),
+        "conv_w": PA(
+            jax.random.normal(ks[1], (s.d_conv, conv_dim), F32).astype(dt)
+            / math.sqrt(s.d_conv),
+            (None, "mlp"),
+        ),
+        "conv_b": _zeros((conv_dim,), ("mlp",), dt),
+        "A_log": PA(
+            jnp.log(jnp.linspace(1.0, 16.0, H, dtype=F32)), ("heads",)
+        ),
+        "D": _ones((H,), ("heads",), F32),
+        "dt_bias": _zeros((H,), ("heads",), F32),
+        "norm_scale": _ones((d_inner,), ("mlp",), F32),
+        "out_proj": _init(ks[2], (d_inner, d), ("mlp", "embed"), dt),
+    }
+    return p
+
+
+def _segsum(x):
+    """x: (..., l) log-decays -> (..., l, l) lower-triangular segment sums."""
+    l = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    seg = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, seg, NEG_INF)
+
+
+def ssd_chunked(x, A, B, C, chunk: int, initial_state=None):
+    """SSD scan: x (b,s,h,p), A (b,s,h) log-decay, B/C (b,s,n).
+
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s_len, h, p = x.shape
+    n = B.shape[-1]
+    chunk = math.gcd(s_len, min(chunk, s_len))
+    nc = s_len // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    Ah = A.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    A_cum = jnp.cumsum(Ah, axis=-1)
+
+    L = jnp.exp(_segsum(Ah))  # (b,h,c,l,l)
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xc.astype(F32)
+    )
+
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)  # (b,h,c,l)
+    states = jnp.einsum(
+        "bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc.astype(F32)
+    )  # per-chunk contribution to the carried state
+
+    chunk_decay = jnp.exp(A_cum[..., -1])  # (b,h,c)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), F32)
+
+    def step(carry, inp):
+        dec, st = inp  # (b,h), (b,h,p,n)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state BEFORE this chunk
+
+    (final_state, prev_states) = lax.scan(
+        step,
+        initial_state.astype(F32),
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,c,h,p,n)
+
+    state_decay = jnp.exp(A_cum)  # (b,h,c,l)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(b, s_len, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def _causal_conv(w, bias, x):
+    """Depthwise causal conv: x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(k)
+    )
+    return out + bias[None, None, :]
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    z, xbc, dt_raw = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * s.d_state], axis=-1
+    )
+    return z, xbc, dt_raw
+
+
+def ssm_apply(
+    params, cfg: ModelConfig, x: jax.Array,
+    cache: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, D) -> (B, S, D); cache = {'conv', 'state'} for decode."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    B_, S_, D_ = x.shape
+    zxbcdt = jnp.dot(
+        x, params["in_proj"], preferred_element_type=F32
+    ).astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    new_cache = None
+    if cache is None or S_ > 1:
+        conv_out = jax.nn.silu(
+            _causal_conv(params["conv_w"], params["conv_b"], xbc).astype(F32)
+        ).astype(x.dtype)
+        if cache is not None:  # prefill: save tails
+            new_conv = xbc[:, -(s.d_conv - 1):, :]
+    else:
+        window = jnp.concatenate([cache["conv"], xbc], axis=1)
+        conv_out = jax.nn.silu(
+            (
+                jnp.einsum("kc,bkc->bc", params["conv_w"], window)
+                + params["conv_b"]
+            ).astype(F32)
+        ).astype(x.dtype)[:, None, :]
+        new_conv = window[:, 1:, :]
+
+    xs, Bv, Cv = jnp.split(
+        conv_out, [d_inner, d_inner + s.d_state], axis=-1
+    )
+    xs = xs.reshape(B_, S_, H, s.headdim)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    if cache is None or S_ > 1:
+        init_state = None
+        y, final_state = ssd_chunked(
+            xs * dt[..., None].astype(x.dtype),
+            dt * A,
+            Bv.astype(F32), Cv.astype(F32),
+            chunk=s.chunk,
+            initial_state=init_state,
+        )
+        if cache is not None:
+            new_cache = {"conv": new_conv, "state": final_state}
+    else:
+        dA = jnp.exp(dt[:, 0] * A)  # (B,H)
+        xdt = xs[:, 0] * dt[:, 0, :, None]  # (B,H,P)
+        state = (
+            cache["state"] * dA[..., None, None]
+            + xdt[..., None] * Bv[:, 0, None, None, :].astype(F32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, Cv[:, 0].astype(F32))
+        y = y[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "state": state}
+
+    y = y + xs * params["D"][None, None, :, None]
+    y = y.reshape(B_, S_, d_inner)
+    # gated RMSNorm (mamba2)
+    g = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * lax.rsqrt(var + cfg.norm_eps) * params["norm_scale"]
+    out = jnp.dot(
+        g.astype(x.dtype), params["out_proj"], preferred_element_type=F32
+    ).astype(x.dtype)
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.param_dtype),
+        "state": jnp.zeros((batch, H, s.headdim, s.d_state), F32),
+    }
+
+
+SSM_CACHE_AXES = {
+    "conv": ("batch", None, "mlp"),
+    "state": ("batch", "heads", None, None),
+}

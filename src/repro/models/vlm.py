@@ -1,0 +1,87 @@
+"""InternVL2-style VLM: ViT frontend STUB + LM backbone.
+
+Per the assignment, the vision tower is not modelled: ``input_specs``
+provides precomputed patch embeddings (B, n_patch, vit_dim).  This module
+owns only the MLP projector (vit_dim -> d_model) and delegates the language
+backbone to ``transformer``.  The image patches form a non-causal-irrelevant
+prefix of the sequence (standard early-fusion decoding).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import transformer as T
+
+VIT_DIM = 1024  # InternViT-300M hidden size (stubbed frontend)
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    k1, k2 = jax.random.split(key)
+    lm_params, lm_axes = T.init(cfg, k1)
+    proj = {
+        "w": L._init(k2, (VIT_DIM, cfg.d_model), (None, "embed"),
+                     cfg.param_dtype),
+        "b": L._zeros((cfg.d_model,), ("embed",), cfg.param_dtype),
+    }
+    pp, pa = L.split_params(proj)
+    lm_params["projector"] = pp
+    lm_axes["projector"] = pa
+    return lm_params, lm_axes
+
+
+def _project(params, patches):
+    return (
+        jnp.dot(patches, params["projector"]["w"],
+                preferred_element_type=L.F32)
+        + params["projector"]["b"]
+    )
+
+
+def forward(params, cfg: ModelConfig, tokens, patches,
+            q_block=512, k_block=512):
+    """tokens (B, S_text), patches (B, n_patch, VIT_DIM) -> logits on text."""
+    B, S_text = tokens.shape
+    img = _project(params, patches).astype(cfg.param_dtype)
+    txt = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
+    x = jnp.concatenate([img, txt], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    x, _ = T._run_segments(
+        params, cfg, x, positions=positions,
+        q_block=q_block, k_block=k_block,
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits_ = L.logits(params["embedding"], cfg, x)
+    return logits_[:, -S_text:]  # predictions over the text span
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, patches, labels, **kw):
+    return L.cross_entropy(
+        forward(params, cfg, tokens, patches, **kw), labels
+    )
+
+
+def prefill(params, cfg: ModelConfig, tokens, patches, max_len: int):
+    B, S_text = tokens.shape
+    img = _project(params, patches).astype(cfg.param_dtype)
+    txt = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
+    x = jnp.concatenate([img, txt], axis=1)
+    S = x.shape[1]
+    caches = T.cache_init(cfg, B, max_len)
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    x, new_caches = T._run_segments(
+        params, cfg, x, positions=positions, caches=caches
+    )
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return L.logits(params["embedding"], cfg, x), new_caches
+
+
+decode_step = T.decode_step  # identical once the cache holds the image prefix
+cache_init = T.cache_init
+cache_axes = T.cache_axes

@@ -1,0 +1,47 @@
+"""Framework-level dense ops.
+
+``dense`` is the single entry point every model matmul goes through.  On TPU
+backends it dispatches 2-D contractions to the Pallas blocked-matmul kernel
+whose block shapes are the cost-model-chosen ``subdiv`` factors (see
+``core.autotune`` / ``core.schedule``); on CPU and in the dry-run it lowers
+to ``lax.dot_general`` so GSPMD can partition it.  This is where the paper's
+technique meets the model zoo.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _use_pallas() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def dense(x: jax.Array, w: jax.Array, out_dtype=None) -> jax.Array:
+    """x: (..., D) @ w: (D, F) -> (..., F), f32 accumulation."""
+    out_dtype = out_dtype or x.dtype
+    if _use_pallas() and x.ndim == 2 and all(
+        s % 128 == 0 for s in (*x.shape, w.shape[1])
+    ):
+        from ..kernels.matmul.ops import matmul
+
+        return matmul(x, w).astype(out_dtype)
+    return jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def weighted_dense(x, w, g, out_dtype=None):
+    """sum_j x_.j w_jk g_j — paper eq 2, fused (kernel on TPU)."""
+    out_dtype = out_dtype or x.dtype
+    if _use_pallas() and x.ndim == 2:
+        from ..kernels.fused_rnz.ops import weighted_matmul
+
+        return weighted_matmul(x, w, g).astype(out_dtype)
+    return jnp.dot(
+        x * g[None, :], w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

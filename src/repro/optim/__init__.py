@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, AdamWState, global_norm, init, update, warmup_cosine  # noqa: F401
+from .quant import Quantized, dequantize, quantize  # noqa: F401
+from .compress import compress_decompress, compressed_psum, hierarchical_psum  # noqa: F401

@@ -1,0 +1,128 @@
+"""AdamW with optional block-quantized 8-bit moments and global-norm clip.
+
+State is a pytree mirroring params; with ``moments_dtype='int8'`` each moment
+leaf is a ``Quantized`` (4.25 bits-per-byte effective ~1.03 B/param each vs
+4 B/param for f32 — the difference between kimi-k2 fitting 512 chips or not).
+Moments are dequantized, updated, and requantized inside the jitted step;
+XLA fuses the round-trip so no f32 copy of the full state ever lives in HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quant import Quantized, dequantize, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _encode(x, how: str):
+    if how == "int8":
+        return quantize(x)
+    return x.astype(jnp.dtype(how))
+
+
+def _decode(x):
+    if isinstance(x, Quantized):
+        return dequantize(x).astype(jnp.float32)
+    return x.astype(jnp.float32)
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.moments_dtype),
+        params,
+    )
+    zeros_v = jax.tree.map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.moments_dtype),
+        params,
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def update(
+    grads,
+    state: AdamWState,
+    params,
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_f = _decode(m)
+        v_f = _decode(v)
+        m_new = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        p_new = (
+            p.astype(jnp.float32)
+            - lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+        ).astype(p.dtype)
+        return p_new, _encode(m_new, cfg.moments_dtype), _encode(
+            v_new, cfg.moments_dtype
+        )
+
+    # flatten to the params tree's leaf positions: a Quantized moment is one
+    # leaf-position subtree there, so flatten_up_to keeps it intact.
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state.m)
+    v_leaves = treedef.flatten_up_to(state.v)
+    out = [leaf(*t) for t in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    new_params = treedef.unflatten([t[0] for t in out])
+    new_m = treedef.unflatten([t[1] for t in out])
+    new_v = treedef.unflatten([t[2] for t in out])
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_params, AdamWState(step, new_m, new_v), metrics
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(warmup: int, total: int, min_ratio: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return warm * cos
+
+    return fn

@@ -1,0 +1,64 @@
+"""Block-wise 8-bit quantization for optimizer moments and gradient
+compression (8-bit-Adam-style dynamic quantization).
+
+Tensors are flattened and quantized in blocks of ``BLOCK`` with a per-block
+absmax scale.  Used for:
+  * Adam m/v states (`optim.adamw` with ``moments_dtype='int8'``) — required
+    to fit kimi-k2's ~1T parameters into 512 x 16 GB (see DESIGN.md),
+  * cross-pod gradient all-reduce compression with error feedback
+    (`optim.compress`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quantized:
+    """int8 payload + per-block f32 scales + original shape/dtype."""
+
+    q: jax.Array          # (nblocks, BLOCK) int8
+    scale: jax.Array      # (nblocks, 1) f32
+    shape: Tuple[int, ...]
+    dtype: jnp.dtype
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        return cls(q, scale, aux[0], aux[1])
+
+
+def quantize(x: jax.Array) -> Quantized:
+    shape, dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q, scale, shape, dtype)
+
+
+def dequantize(qv: Quantized) -> jax.Array:
+    flat = (qv.q.astype(jnp.float32) * qv.scale).reshape(-1)
+    n = 1
+    for d in qv.shape:
+        n *= d
+    return flat[:n].reshape(qv.shape).astype(qv.dtype)
+
+
+def quantization_bytes(qv: Quantized) -> int:
+    return qv.q.size + qv.scale.size * 4

@@ -1,0 +1,232 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads the per-cell JSONs written by launch.dryrun and derives the three
+terms per (arch x shape x mesh):
+
+    compute_s    = HLO_FLOPs / (chips x 197e12)       [bf16 peak/chip]
+    memory_s     = HLO_bytes / (chips x 819e9)        [HBM BW/chip]
+    collective_s = collective_bytes / (chips x 50e9)  [ICI link BW]
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* numbers,
+and the collective shapes in the partitioned HLO are per-device shards, so
+all three terms are already per-chip; chips only enters MODEL_FLOPS ratios.
+
+MODEL_FLOPS (the useful-work floor) is 6·N_active·tokens for training and
+2·N_active·tokens for inference; the ratio against total HLO_FLOPs exposes
+remat recompute and sharding-induced redundancy.
+
+Caveat on the memory term: the CPU-backend HLO has no TPU fusion decisions,
+so the bytes estimate (dot operands/outputs + every non-bookkeeping op
+output) is an UPPER BOUND — on the real chip most elementwise intermediates
+stay in VMEM.  ``dot_bytes`` alone (in the JSON) is the corresponding floor.
+Terms are comparable across variants, which is what the §Perf loop needs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # B/s / chip
+ICI_BW = 50e9         # B/s / link
+
+_SUGGEST = {
+    "compute": "raise arithmetic efficiency: larger per-chip batch or less "
+               "remat recompute (MODEL/HLO flops ratio shows the headroom)",
+    "memory": "cut HBM traffic: fuse elementwise chains into the matmul "
+              "epilogues (paper eq 27) and keep KV/activations in bf16",
+    "collective": "re-shard to cheaper collectives: move the all-gather off "
+                  "the critical path (overlapped collective matmul) or "
+                  "shard the other operand dim (paper's flip exchange)",
+}
+
+
+def param_counts(arch: str) -> Dict[str, float]:
+    """Total and active parameter counts via eval_shape (no allocation)."""
+    import jax
+
+    from ..configs import get_config
+    from ..models.api import get_api
+
+    cfg = get_config(arch)
+    api = get_api(cfg)
+    shapes = jax.eval_shape(lambda k: api.init(cfg, k)[0], jax.random.key(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    expert = 0
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        total += n
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "moe" in keys and "shared" not in keys and "router" not in keys:
+            expert += n
+    active = total
+    if cfg.moe is not None and expert:
+        active = total - expert * (1 - cfg.moe.top_k / cfg.moe.n_experts)
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(arch: str, shape_name: str, counts: Dict[str, float]) -> float:
+    from ..configs import SHAPES
+
+    s = SHAPES[shape_name]
+    n = counts["active"]
+    if s.kind == "train":
+        tokens = s.global_batch * s.seq_len
+        return 6.0 * n * tokens
+    if s.kind == "prefill":
+        tokens = s.global_batch * s.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * s.global_batch
+
+
+def analyze_cell(rec: Dict, counts: Optional[Dict] = None) -> Dict:
+    if rec["status"] != "ok":
+        return dict(rec)
+    chips = rec["chips"]
+    parsed = rec.get("parsed")
+    if parsed:  # trip-count-aware numbers from roofline.hlo_parse
+        flops = parsed["dot_flops"]
+        # HBM estimate: dot operand/output traffic + non-dot materialized
+        # outputs (out_bytes_proxy excludes dots and bookkeeping ops);
+        # legacy records (no dot_bytes) fall back to the raw proxy
+        if "dot_bytes" in parsed:
+            mem_bytes = parsed["dot_bytes"] + parsed["out_bytes_proxy"]
+        else:
+            mem_bytes = parsed["out_bytes_proxy"]
+        coll_bytes = parsed["collective_bytes"]
+    else:  # legacy records: while bodies counted once (undercounts!)
+        flops = rec["flops"]
+        mem_bytes = rec["bytes_accessed"]
+        coll_bytes = sum(
+            v for k, v in rec["collectives"].items() if k != "count"
+        )
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    out = dict(rec)
+    out.update(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        collective_bytes=coll_bytes,
+        dominant=dominant,
+        suggestion=_SUGGEST[dominant],
+    )
+    if counts:
+        mf = model_flops(rec["arch"], rec["shape"], counts)
+        total_hlo = flops * chips
+        out["model_flops"] = mf
+        out["useful_ratio"] = mf / total_hlo if total_hlo else 0.0
+        # roofline fraction: time the chip MUST spend vs time it spends.
+        # Conservative = materialize-everything memory bound; fused = memory
+        # floor (dot traffic only), the realistic number on a TPU whose
+        # fusion keeps elementwise intermediates in VMEM.
+        ideal = (mf / chips) / PEAK_FLOPS
+        bound = max(compute_s, memory_s, collective_s)
+        out["roofline_fraction"] = ideal / bound if bound else 0.0
+        if parsed and "dot_bytes" in parsed:
+            mem_fused_s = parsed["dot_bytes"] / HBM_BW
+            bound_fused = max(compute_s, mem_fused_s, collective_s)
+            out["memory_fused_s"] = mem_fused_s
+            out["roofline_fraction_fused"] = (
+                ideal / bound_fused if bound_fused else 0.0
+            )
+            out["dominant_fused"] = max(
+                ("compute", compute_s), ("memory", mem_fused_s),
+                ("collective", collective_s),
+                key=lambda kv: kv[1],
+            )[0]
+    return out
+
+
+def load_results(results_dir: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyze_all(results_dir: str, with_counts: bool = True) -> List[Dict]:
+    cache: Dict[str, Dict] = {}
+    rows = []
+    for rec in load_results(results_dir):
+        counts = None
+        if with_counts and rec["status"] == "ok":
+            if rec["arch"] not in cache:
+                cache[rec["arch"]] = param_counts(rec["arch"])
+            counts = cache[rec["arch"]]
+        rows.append(analyze_cell(rec, counts))
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(rows: List[Dict], mesh: Optional[str] = None) -> str:
+    lines = [
+        "| arch | shape | mesh | step | compute | memory(ub) | mem(fused) "
+        "| collective | bound(fused) | MODEL/HLO | frac | frac(fused) |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | — | "
+                f"skipped | — | — | — | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | — | "
+                f"ERROR | — | — | — | — | — | — | — |"
+            )
+            continue
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {step} | {c} | {m} | {mf} | {k} "
+            "| {dom} | {ur:.2f} | {rf:.3f} | {rff:.3f} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                step=r["step"].replace("_step", ""),
+                c=_fmt_s(r["compute_s"]), m=_fmt_s(r["memory_s"]),
+                mf=_fmt_s(r.get("memory_fused_s", 0.0)),
+                k=_fmt_s(r["collective_s"]),
+                dom=r.get("dominant_fused", r["dominant"]),
+                ur=r.get("useful_ratio", 0.0),
+                rf=r.get("roofline_fraction", 0.0),
+                rff=r.get("roofline_fraction_fused", 0.0),
+            )
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = analyze_all(args.results)
+    print(markdown_table(rows, mesh=args.mesh))
+
+
+if __name__ == "__main__":
+    main()

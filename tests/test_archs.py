@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness; plus a decode step for decoder archs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_applicable, get_config
+from repro.models.api import batch_spec, get_api
+
+
+def make_smoke_batch(cfg, kind: str, batch=2, seq=16):
+    rng = np.random.default_rng(0)
+    b = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32
+    )}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((batch, 8, cfg.d_model)), cfg.param_dtype
+        )
+    if cfg.family == "vlm":
+        from repro.models.vlm import VIT_DIM
+
+        b["patches"] = jnp.asarray(
+            rng.standard_normal((batch, 4, VIT_DIM)), cfg.param_dtype
+        )
+    if kind == "train":
+        b["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, b["tokens"].shape), jnp.int32
+        )
+    return b
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch_id):
+    cfg = get_config(arch_id).smoke()
+    api = get_api(cfg)
+    params, axes = api.init(cfg, jax.random.key(0))
+    # axes tree mirrors params tree
+    p_leaves = jax.tree.leaves(params)
+    a_leaves = jax.tree.leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple) or x is None
+    )
+    assert len(p_leaves) == len(a_leaves)
+
+    batch = make_smoke_batch(cfg, "train")
+    logits = api.forward(params, cfg, batch, q_block=8, k_block=8)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert bool(jnp.isfinite(logits).all()), f"{arch_id}: non-finite logits"
+
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss(p, cfg, batch, q_block=8, k_block=8)
+    )(params)
+    assert bool(jnp.isfinite(loss)), f"{arch_id}: non-finite loss"
+    assert all(
+        bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)
+    ), f"{arch_id}: non-finite grads"
+    # one SGD step must change the params and keep them finite
+    new_params = jax.tree.map(lambda p, g: p - 1e-2 * g, params, grads)
+    loss2 = api.loss(new_params, cfg, batch, q_block=8, k_block=8)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_decode(arch_id):
+    cfg = get_config(arch_id).smoke()
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.key(0))
+    batch = make_smoke_batch(cfg, "prefill")
+    logits, caches = api.prefill(params, cfg, batch, max_len=24)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(3):
+        logits1, caches = api.decode_step(params, cfg, caches, tok)
+        assert logits1.shape[1] == 1 and logits1.shape[-1] == cfg.vocab
+        assert bool(jnp.isfinite(logits1).all()), arch_id
+        tok = jnp.argmax(logits1, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_fields(arch_id):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch_id)
+    expected = {
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102_400),
+        "qwen3-8b": (36, 4096, 32, 8, 12_288, 151_936),
+        "granite-34b": (88, 6144, 48, 1, 24_576, 49_152),
+        "qwen2-72b": (80, 8192, 64, 8, 29_568, 152_064),
+        "whisper-base": (6, 512, 8, 8, 2048, 51_865),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151_655),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 16_384, 202_048),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 18_432, 163_840),
+        "mamba2-130m": (24, 768, 24, 0, 0, 50_280),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10_240, 32_000),
+    }[arch_id]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected, f"{arch_id}: {got} != {expected}"
+
+
+def test_moe_param_counts_match_headlines():
+    """llama4 ~400B total/~17B active; kimi ~1T total/~32B active."""
+    def count(cfg):
+        m = cfg.moe
+        d = cfg.d_model
+        n_moe = (cfg.n_layers - m.first_dense) // m.moe_every
+        n_dense = cfg.n_layers - n_moe
+        expert = 3 * d * m.expert_ff * m.n_experts
+        shared = 3 * d * m.shared_expert_ff if m.shared_expert_ff else 0
+        dense_mlp = 3 * d * (m.dense_ff or cfg.d_ff)
+        attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd + \
+            cfg.n_heads * cfg.hd * d
+        total = (n_moe * (expert + shared + attn)
+                 + n_dense * (dense_mlp + attn)
+                 + 2 * cfg.vocab * d)
+        active_expert = 3 * d * m.expert_ff * m.top_k
+        active = (n_moe * (active_expert + shared + attn)
+                  + n_dense * (dense_mlp + attn) + 2 * cfg.vocab * d)
+        return total, active
+
+    t, a = count(get_config("llama4-maverick-400b-a17b"))
+    assert 3.5e11 < t < 4.6e11, t
+    assert 1.2e10 < a < 2.2e10, a
+    t, a = count(get_config("kimi-k2-1t-a32b"))
+    assert 0.9e12 < t < 1.2e12, t
+    assert 2.4e10 < a < 4.0e10, a
+
+
+def test_shape_grid_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md skips)."""
+    runnable = {
+        a for a in ARCH_IDS
+        if cell_is_applicable(get_config(a), SHAPES["long_500k"])[0]
+    }
+    assert runnable == {"mamba2-130m", "zamba2-2.7b"}
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            ok, _ = cell_is_applicable(get_config(a), SHAPES[s])
+            assert ok
+
+
+def test_batch_specs_cover_all_cells():
+    from repro.models.api import batch_spec
+
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, _ = cell_is_applicable(cfg, s)
+            if not ok:
+                continue
+            spec = batch_spec(cfg, s)
+            assert "tokens" in spec
+            for name, (shape, dtype) in spec.items():
+                assert all(d > 0 for d in shape), (a, s.name, name)

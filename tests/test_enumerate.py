@@ -1,0 +1,151 @@
+"""Variant enumeration: every SJT ordering computes the same contraction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import cpu_cost, early_cut, rank_variants
+from repro.core.enumerate import (
+    ContractionSpec, evaluate_variant, matmul_spec, matvec_spec,
+    nest_to_expr, paper_fig3_variants, sjt, variant_orders,
+    weighted_matmul_spec, tensor_contraction_spec,
+)
+
+
+def test_sjt_is_all_permutations_by_adjacent_swaps():
+    perms = list(sjt(4))
+    assert len(perms) == 24
+    assert len(set(perms)) == 24
+    for a, b in zip(perms, perms[1:]):
+        diff = [i for i in range(4) if a[i] != b[i]]
+        assert len(diff) == 2 and abs(diff[0] - diff[1]) == 1
+
+
+def test_matmul_six_permutations_table1():
+    """Paper Table 1: the 3 HoFs of naive matmul give 6 orderings, all equal."""
+    spec = matmul_spec(4, 5, 3)
+    rng = np.random.default_rng(0)
+    arrays = {
+        "A": rng.standard_normal((4, 5)),
+        "B": rng.standard_normal((5, 3)),
+    }
+    expected = arrays["A"] @ arrays["B"]
+    orders = variant_orders(spec, dedup_rnz=False)
+    assert len(orders) == 6
+    for order in orders:
+        got = evaluate_variant(spec, order, arrays)
+        np.testing.assert_allclose(got, expected, rtol=1e-10, err_msg=str(order))
+
+
+def test_matmul_subdivided_rnz_twelve_variants_table2():
+    """Paper Table 2: subdividing the rnz gives 12 distinguishable orderings."""
+    spec = matmul_spec(4, 6, 3).subdivide("j", 2)
+    rng = np.random.default_rng(1)
+    arrays = {
+        "A": rng.standard_normal((4, 6)),
+        "B": rng.standard_normal((6, 3)),
+    }
+    expected = arrays["A"] @ arrays["B"]
+    orders = variant_orders(spec)
+    # 4 loops, jo must stay outside ji, two rnz indistinguishable -> 12
+    assert len(orders) == 12
+    for order in orders:
+        got = evaluate_variant(spec, order, arrays)
+        np.testing.assert_allclose(got, expected, rtol=1e-10, err_msg=str(order))
+
+
+def test_fig3_matvec_variants():
+    """Paper Fig 3: all six subdivided matvec rearrangements agree."""
+    rng = np.random.default_rng(2)
+    n, m, b = 6, 8, 2
+    A, u = rng.standard_normal((n, m)), rng.standard_normal(m)
+    for label, order, spec in paper_fig3_variants(n, m, b):
+        got = evaluate_variant(spec, order, {"A": A, "u": u})
+        np.testing.assert_allclose(got, A @ u, rtol=1e-10, err_msg=label)
+
+
+def test_weighted_matmul_eq2_variants():
+    spec = weighted_matmul_spec(3, 4, 5)
+    rng = np.random.default_rng(3)
+    arrays = {
+        "A": rng.standard_normal((3, 4)),
+        "B": rng.standard_normal((4, 5)),
+        "g": rng.standard_normal(4),
+    }
+    expected = np.einsum("ij,jk,j->ik", arrays["A"], arrays["B"], arrays["g"])
+    for order in variant_orders(spec, dedup_rnz=False):
+        got = evaluate_variant(spec, order, arrays)
+        np.testing.assert_allclose(got, expected, rtol=1e-10, err_msg=str(order))
+
+
+def test_pde_tensor_contraction_eq7():
+    """Paper eq 7: C_ipq = sum_jk A_ijk B_jp C_kq g_j f_k."""
+    spec = tensor_contraction_spec(2, 3, 4, 2, 3)
+    rng = np.random.default_rng(4)
+    arrays = {
+        "A": rng.standard_normal((2, 3, 4)),
+        "B": rng.standard_normal((3, 2)),
+        "C": rng.standard_normal((4, 3)),
+        "g": rng.standard_normal(3),
+        "f": rng.standard_normal(4),
+    }
+    expected = np.einsum(
+        "ijk,jp,kq,j,k->ipq",
+        arrays["A"], arrays["B"], arrays["C"], arrays["g"], arrays["f"],
+    )
+    # spot-check a handful of orderings (120 perms is slow in the interpreter)
+    orders = variant_orders(spec)[:8]
+    for order in orders:
+        got = evaluate_variant(spec, order, arrays)
+        np.testing.assert_allclose(got, expected, rtol=1e-9, err_msg=str(order))
+
+
+def test_double_subdivision_of_rnz():
+    """Paper Fig 5: rnz subdivided twice still agrees everywhere."""
+    spec = matmul_spec(4, 8, 3).subdivide("j", 4).subdivide("ji", 2)
+    rng = np.random.default_rng(5)
+    arrays = {
+        "A": rng.standard_normal((4, 8)),
+        "B": rng.standard_normal((8, 3)),
+    }
+    expected = arrays["A"] @ arrays["B"]
+    orders = variant_orders(spec)[:10]
+    assert orders
+    for order in orders:
+        got = evaluate_variant(spec, order, arrays)
+        np.testing.assert_allclose(got, expected, rtol=1e-10, err_msg=str(order))
+
+
+# -- cost model ---------------------------------------------------------------
+
+
+def test_cost_model_prefers_paper_table1_winner():
+    """Paper Table 1: best = (mapA, rnz, mapB), worst = (mapB, rnz, mapA).
+
+    mapA = i, mapB = k, rnz = j.  The model must reproduce the ends of the
+    measured ordering (B row-wise inner = good; A and B column-wise = bad).
+    """
+    spec = matmul_spec(1024, 1024, 1024)
+    ranked = rank_variants(spec, variant_orders(spec, dedup_rnz=False))
+    orders_sorted = [o for _, o in ranked]
+    best, worst = ("i", "j", "k"), ("k", "j", "i")
+    assert orders_sorted.index(best) <= 1, orders_sorted
+    assert orders_sorted.index(worst) >= len(orders_sorted) - 2, orders_sorted
+
+
+def test_cost_model_blocked_beats_naive():
+    spec = matmul_spec(1024, 1024, 1024)
+    naive = cpu_cost(spec, ("i", "j", "k"))
+    blocked_spec = spec.subdivide("j", 16)
+    blocked = cpu_cost(blocked_spec, ("i", "jo", "ji", "k"))
+    # paper Table 2: subdividing the reduction improves locality
+    assert blocked < naive
+
+
+def test_early_cut_keeps_cheap_variants():
+    spec = matmul_spec(512, 512, 512)
+    orders = variant_orders(spec, dedup_rnz=False)
+    kept = early_cut(spec, orders, keep=2)
+    assert len(kept) == 2
+    ranked = rank_variants(spec, orders)
+    assert kept[0] == ranked[0][1]

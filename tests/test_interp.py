@@ -1,0 +1,166 @@
+"""Reference interpreter: DSL formulations of paper examples vs numpy."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expr as E
+from repro.core.expr import (
+    App, Flip, Lam, MapN, Prim, RNZ, Subdiv, Flatten, Tup, Var,
+    dot, lam, map1, reduce1, v, zip2,
+)
+from repro.core.interp import run
+
+
+def rnd(*shape):
+    rng = np.random.default_rng(sum(shape) + 7)
+    return rng.standard_normal(shape)
+
+
+def test_dot_product_eq29():
+    # dot u v = reduce (+) (zip (*) u v) = rnz (+) (*) u v
+    u, w = rnd(5), rnd(5)
+    expected = float(u @ w)
+    as_reduce = reduce1(Prim("+"), zip2(Prim("*"), v("u"), v("w")))
+    as_rnz = dot(v("u"), v("w"))
+    np.testing.assert_allclose(run(as_reduce, u=u, w=w), expected, rtol=1e-12)
+    np.testing.assert_allclose(run(as_rnz, u=u, w=w), expected, rtol=1e-12)
+
+
+def test_matvec_eq39():
+    # map (\r -> rnz (+) (*) r u) A  ==  A @ u
+    A, u = rnd(4, 6), rnd(6)
+    e = map1(lam("r", dot(v("r"), v("u"))), v("A"))
+    np.testing.assert_allclose(run(e, A=A, u=u), A @ u, rtol=1e-12)
+
+
+def test_matvec_flipped_eq40():
+    # rnz (zip (+)) (\c q -> map (\e -> e*q) c) (flip 0 A) u  ==  A @ u
+    A, u = rnd(4, 6), rnd(6)
+    e = RNZ(
+        E.lift(Prim("+")),
+        lam(
+            ("c", "q"),
+            map1(lam("e", App(Prim("*"), (v("e"), v("q")))), v("c")),
+        ),
+        (Flip(0, 1, v("A")), v("u")),
+    )
+    np.testing.assert_allclose(run(e, A=A, u=u), A @ u, rtol=1e-12)
+
+
+def test_dyadic_product_eq36_37():
+    # map (\x -> map (\y -> x*y) u) w == outer(w, u); flipped version transposes
+    w, u = rnd(3), rnd(5)
+    e1 = map1(
+        lam("x", map1(lam("y", App(Prim("*"), (v("x"), v("y")))), v("u"))),
+        v("w"),
+    )
+    np.testing.assert_allclose(run(e1, w=w, u=u), np.outer(w, u), rtol=1e-12)
+
+
+def test_naive_matmul_eq51():
+    # C = map (\rA -> map (\cB -> rnz (+) (*) rA cB) B^T) A
+    A, B = rnd(4, 5), rnd(5, 3)
+    e = map1(
+        lam(
+            "rA",
+            map1(lam("cB", dot(v("rA"), v("cB"))), Flip(0, 1, v("B"))),
+        ),
+        v("A"),
+    )
+    np.testing.assert_allclose(run(e, A=A, B=B), A @ B, rtol=1e-12)
+
+
+def test_fused_matvec_motivating_eq1():
+    # w_i = sum_j (A_ij + B_ij) * (v_j + u_j)
+    A, B, vv, u = rnd(3, 4), rnd(3, 4), rnd(4), rnd(4)
+    row_sum = zip2(Prim("+"), v("rA"), v("rB"))
+    vec_sum = zip2(Prim("+"), v("vv"), v("u"))
+    e = MapN(
+        lam(("rA", "rB"), reduce1(Prim("+"), zip2(Prim("*"), row_sum, vec_sum))),
+        (v("A"), v("B")),
+    )
+    np.testing.assert_allclose(
+        run(e, A=A, B=B, vv=vv, u=u), (A + B) @ (vv + u), rtol=1e-12
+    )
+
+
+def test_weighted_matmul_motivating_eq2():
+    # C_ik = sum_j A_ij * B_jk * g_j
+    A, B, g = rnd(3, 4), rnd(4, 5), rnd(4)
+    e = map1(
+        lam(
+            "rA",
+            map1(
+                lam(
+                    "cB",
+                    RNZ(
+                        Prim("+"),
+                        lam(
+                            ("a", "b", "gg"),
+                            App(
+                                Prim("*"),
+                                (
+                                    App(Prim("*"), (v("a"), v("b"))),
+                                    v("gg"),
+                                ),
+                            ),
+                        ),
+                        (v("rA"), v("cB"), v("g")),
+                    ),
+                ),
+                Flip(0, 1, v("B")),
+            ),
+        ),
+        v("A"),
+    )
+    np.testing.assert_allclose(
+        run(e, A=A, B=B, g=g), np.einsum("ij,jk,j->ik", A, B, g), rtol=1e-12
+    )
+
+
+def test_subdiv_map_identity_eq44():
+    # map f v = flatten (map (map f) (subdiv v))
+    x = rnd(12)
+    f = lam("e", App(Prim("*"), (v("e"), v("e"))))
+    naive = map1(f, v("x"))
+    blocked = Flatten(
+        -2, map1(lam("blk", map1(f, v("blk"))), Subdiv(-1, 4, v("x")))
+    )
+    np.testing.assert_allclose(
+        run(blocked, x=x), run(naive, x=x), rtol=1e-12
+    )
+
+
+def test_rnz_regroup_over_blocks():
+    x = rnd(12)
+    naive = reduce1(Prim("+"), v("x"))
+    blocked = RNZ(
+        Prim("+"),
+        lam("blk", reduce1(Prim("+"), v("blk"))),
+        (Subdiv(-1, 3, v("x")),),
+    )
+    np.testing.assert_allclose(run(blocked, x=x), run(naive, x=x), rtol=1e-12)
+
+
+def test_soa_product_map():
+    # (map f x, map g y) via FnProd over SoA tuples (paper eqs 30-31)
+    x, y = rnd(6), rnd(6)
+    f = lam("a", App(Prim("*"), (v("a"), E.Lit(2.0))))
+    g = lam("a", App(Prim("+"), (v("a"), E.Lit(1.0))))
+    fused = MapN(E.FnProd((f, g)), (Tup((v("x"), v("y"))),))
+    out = run(fused, x=x, y=y)
+    np.testing.assert_allclose(out[0], 2 * x, rtol=1e-12)
+    np.testing.assert_allclose(out[1], y + 1, rtol=1e-12)
+
+
+@given(
+    n=st.integers(1, 8),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=50, deadline=None)
+def test_matvec_property(n, m, seed):
+    rng = np.random.default_rng(seed)
+    A, u = rng.standard_normal((n, m)), rng.standard_normal(m)
+    e = map1(lam("r", dot(v("r"), v("u"))), v("A"))
+    np.testing.assert_allclose(run(e, A=A, u=u), A @ u, rtol=1e-10, atol=1e-10)

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True executes the kernel
+body on CPU).  Shape/dtype sweeps + hypothesis block-shape property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.matmul.matmul import matmul_pallas
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.fused_rnz.fused_rnz import weighted_matmul_pallas
+from repro.kernels.fused_rnz.ref import weighted_matmul_ref
+from repro.kernels.fused_dense_act.fused_dense_act import fused_dense_act_pallas
+from repro.kernels.fused_dense_act.ref import fused_dense_act_ref
+
+
+def rnd(*shape, dtype=jnp.float32, seed=0):
+    x = np.random.default_rng(seed + sum(shape)).standard_normal(shape)
+    return jnp.asarray(x, dtype=dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,n,k,bm,bn,bk",
+    [
+        (32, 32, 32, 16, 16, 16),
+        (64, 48, 80, 16, 16, 16),
+        (128, 128, 64, 64, 32, 32),
+        (16, 128, 256, 8, 128, 128),
+    ],
+)
+def test_matmul_kernel_sweep(m, n, k, bm, bn, bk, dtype):
+    a, b = rnd(m, k, dtype=dtype), rnd(k, n, dtype=dtype, seed=1)
+    out = matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    ref = matmul_ref(a, b)
+    assert out.dtype == ref.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+@given(
+    mi=st.integers(1, 4), ni=st.integers(1, 4), ki=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]), bn=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+)
+@settings(max_examples=12, deadline=None)
+def test_matmul_kernel_block_property(mi, ni, ki, bm, bn, bk):
+    """For any grid x block combination, kernel == oracle."""
+    m, n, k = mi * bm, ni * bn, ki * bk
+    a, b = rnd(m, k), rnd(k, n, seed=2)
+    out = matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,n,k,bm,bn,bk",
+    [(32, 32, 32, 16, 16, 16), (64, 48, 96, 16, 16, 32)],
+)
+def test_weighted_matmul_kernel(m, n, k, bm, bn, bk, dtype):
+    a, b, g = rnd(m, k, dtype=dtype), rnd(k, n, dtype=dtype, seed=1), rnd(k, dtype=dtype, seed=2)
+    out = weighted_matmul_pallas(
+        a, b, g, block_m=bm, block_n=bn, block_k=bk, interpret=True
+    )
+    ref = weighted_matmul_ref(a, b, g)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+    # the fusion point of paper eq 2: must equal einsum(ij,jk,j->ik)
+    if dtype == jnp.float32:
+        ein = np.einsum(
+            "ij,jk,j->ik",
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            np.asarray(g, np.float32),
+        )
+        np.testing.assert_allclose(np.asarray(out, np.float32), ein, **TOL[dtype])
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "tanh", "id"])
+def test_fused_dense_act_kernel(act):
+    b, i, k = 32, 64, 48
+    x, w = rnd(b, i), rnd(i, k, seed=1)
+    beta, mean = rnd(k, seed=2), rnd(k, seed=3)
+    var = jnp.abs(rnd(k, seed=4)) + 0.5
+    out = fused_dense_act_pallas(
+        x, w, beta, mean, var, act=act,
+        block_b=16, block_k=16, block_i=16, interpret=True,
+    )
+    ref = fused_dense_act_ref(x, w, beta, mean, var, act=act)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_fused_dense_act_matches_unfused_pipeline():
+    """Fused kernel == the three-stage pipeline of paper eqs 3-5."""
+    b, i, k = 16, 32, 32
+    x, w = rnd(b, i), rnd(i, k, seed=5)
+    beta, mean = rnd(k, seed=6), rnd(k, seed=7)
+    var = jnp.abs(rnd(k, seed=8)) + 0.5
+    y = x @ w + beta[None, :]
+    z = (y - mean[None, :]) / jnp.sqrt(var[None, :] + 1e-5)
+    r = jax.nn.gelu(z)
+    out = fused_dense_act_pallas(
+        x, w, beta, mean, var, act="gelu",
+        block_b=8, block_k=16, block_i=16, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_blocks_are_paper_subdivisions():
+    """The kernel's grid/block structure equals the schedule's subdiv chain."""
+    from repro.core.schedule import matmul_schedule
+
+    sch = matmul_schedule(
+        256, 256, 256, block_m=64, block_n=64, block_k=128
+    )
+    grid = [l for l in sch.levels if l.tier == "grid"]
+    seq = [l for l in sch.levels if l.tier == "seq"]
+    mxu = [l for l in sch.levels if l.tier == "mxu"]
+    assert [l.extent for l in grid] == [256 // 64, 256 // 64]
+    assert [l.extent for l in seq] == [256 // 128]
+    assert sorted(l.extent for l in mxu) == [64, 64, 128]
+    # and the kernel with exactly those blocks is correct
+    a, b = rnd(256, 256), rnd(256, 256, seed=9)
+    out = matmul_pallas(a, b, block_m=64, block_n=64, block_k=128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )

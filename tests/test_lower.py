@@ -1,0 +1,133 @@
+"""JAX lowering agrees with the reference interpreter / numpy."""
+
+import numpy as np
+import pytest
+
+from repro.core import expr as E
+from repro.core.autotune import choose_matmul_blocks, tune
+from repro.core.enumerate import (
+    matmul_spec, matvec_spec, variant_orders, weighted_matmul_spec,
+)
+from repro.core.execute import execute_variant
+from repro.core.expr import App, Flip, Lam, Prim, RNZ, dot, lam, map1, v, zip2
+from repro.core.interp import run
+from repro.core.lower import contraction_to_jax, jax_run
+from repro.core.rewrite import fuse
+from repro.core.schedule import matmul_schedule
+
+
+def rnd(*shape, seed=0):
+    return np.random.default_rng(seed + sum(shape)).standard_normal(shape)
+
+
+def test_jax_run_matvec():
+    A, u = rnd(4, 6), rnd(6)
+    e = map1(lam("r", dot(v("r"), v("u"))), v("A"))
+    np.testing.assert_allclose(
+        np.asarray(jax_run(e, A=A, u=u)), A @ u, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_jax_run_matches_interp_on_fused_pipeline():
+    A, B, vv, u = rnd(3, 4), rnd(3, 4, seed=1), rnd(4), rnd(4, seed=2)
+    row_sum = zip2(Prim("+"), v("rA"), v("rB"))
+    vec_sum = zip2(Prim("+"), v("vv"), v("u"))
+    e = E.MapN(
+        lam(
+            ("rA", "rB"),
+            RNZ(Prim("+"), Prim("id"), (zip2(Prim("*"), row_sum, vec_sum),)),
+        ),
+        (v("A"), v("B")),
+    )
+    fused = fuse(e)
+    ref = run(fused, A=A, B=B, vv=vv, u=u)
+    got = np.asarray(jax_run(fused, A=A, B=B, vv=vv, u=u))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_jax_run_flipped_matvec_eq40():
+    A, u = rnd(5, 7), rnd(7)
+    e = RNZ(
+        E.lift(Prim("+")),
+        lam(
+            ("c", "q"),
+            map1(lam("e", App(Prim("*"), (v("e"), v("q")))), v("c")),
+        ),
+        (Flip(0, 1, v("A")), v("u")),
+    )
+    np.testing.assert_allclose(np.asarray(jax_run(e, A=A, u=u)), A @ u, rtol=1e-4, atol=1e-5)
+
+
+def test_contraction_to_jax_all_table1_orders():
+    spec = matmul_spec(8, 6, 10)
+    A, B = rnd(8, 6), rnd(6, 10, seed=3)
+    for order in variant_orders(spec, dedup_rnz=False):
+        fn = contraction_to_jax(spec, order)
+        np.testing.assert_allclose(
+            np.asarray(fn(A, B)), A @ B, rtol=1e-5, err_msg=str(order)
+        )
+
+
+def test_contraction_to_jax_subdivided():
+    spec = matmul_spec(8, 12, 10).subdivide("j", 4)
+    A, B = rnd(8, 12), rnd(12, 10, seed=4)
+    for order in variant_orders(spec)[:6]:
+        fn = contraction_to_jax(spec, order)
+        np.testing.assert_allclose(
+            np.asarray(fn(A, B)), A @ B, rtol=1e-5, err_msg=str(order)
+        )
+
+
+def test_execute_variant_matches():
+    spec = matmul_spec(16, 12, 8).subdivide("j", 4)
+    A, B = rnd(16, 12), rnd(12, 8, seed=5)
+    for order in variant_orders(spec)[:6]:
+        got = execute_variant(spec, order, {"A": A, "B": B})
+        np.testing.assert_allclose(got, A @ B, rtol=1e-10, err_msg=str(order))
+
+
+def test_execute_variant_weighted():
+    spec = weighted_matmul_spec(6, 8, 10)
+    A, B, g = rnd(6, 8), rnd(8, 10, seed=6), rnd(8, seed=7)
+    ref = np.einsum("ij,jk,j->ik", A, B, g)
+    for order in variant_orders(spec)[:4]:
+        got = execute_variant(spec, order, {"A": A, "B": B, "g": g})
+        np.testing.assert_allclose(got, ref, rtol=1e-10, err_msg=str(order))
+
+
+def test_tune_pipeline_end_to_end():
+    spec = matmul_spec(64, 64, 64)
+    arrays = {"A": rnd(64, 64), "B": rnd(64, 64, seed=8)}
+    tuned = tune(
+        spec,
+        subdiv_candidates={"j": [16]},
+        keep=3,
+        measure_with=arrays,
+        repeats=1,
+    )
+    assert len(tuned) == 3
+    assert tuned[0].measured_s is not None
+    # the winner must still be correct
+    got = execute_variant(tuned[0].spec, tuned[0].order, arrays)
+    np.testing.assert_allclose(got, arrays["A"] @ arrays["B"], rtol=1e-10)
+
+
+def test_choose_matmul_blocks_alignment_and_vmem():
+    bm, bn, bk = choose_matmul_blocks(4096, 4096, 4096, elem_bytes=2)
+    assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+    assert (bm * bk + bk * bn + bm * bn) * 2 * 2 <= 64 * 1024 * 1024
+    # tiny problems degrade gracefully
+    assert choose_matmul_blocks(16, 16, 16) == (16, 16, 16)
+
+
+def test_matmul_schedule_hierarchy():
+    sch = matmul_schedule(
+        4096, 4096, 4096,
+        block_m=128, block_n=128, block_k=512,
+        data_shard=16, model_shard=16, pod_shard=2,
+    )
+    tiers = [l.tier for l in sch.levels]
+    assert tiers[0] == "mesh:pod" and "mesh:data" in tiers and "mesh:model" in tiers
+    assert tiers[-1] == "mxu"
+    # every subdivision is recorded in the spec chain
+    assert len(sch.spec.split_chain()) >= 5

@@ -1,0 +1,208 @@
+"""Deeper model-correctness tests.
+
+* Mamba2 SSD chunked algorithm == naive sequential recurrence.
+* Chunk size must not change SSD results (the paper's subdiv identity,
+  applied to the SSD inter/intra-chunk decomposition).
+* Prefill + decode_step logits == full forward logits at the same position
+  (cache path equivalence) for dense, MoE, SSM, and hybrid families.
+* Blockwise (flash-style) attention == naive softmax attention for
+  causal/non-causal, GQA/MQA, across block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.models import hybrid as H
+from repro.models import transformer as T
+from repro.models.layers import blockwise_attention
+from repro.models.ssm import ssd_chunked
+
+
+def naive_ssd(x, A, B, C):
+    """Sequential state-space recurrence (the definition)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = np.zeros((b, h, p, n))
+    ys = np.zeros_like(np.asarray(x))
+    for t in range(s):
+        dA = np.exp(np.asarray(A[:, t]))  # (b,h)
+        state = state * dA[..., None, None] + (
+            np.asarray(x[:, t])[..., None] * np.asarray(B[:, t])[:, None, None, :]
+        )
+        ys[:, t] = np.einsum("bhpn,bn->bhp", state, np.asarray(C[:, t]))
+    return ys
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 4, 8, 16])
+def test_ssd_chunked_equals_recurrence(chunk):
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 16, 3, 4, 5
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    A = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.5, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    y, _ = ssd_chunked(x, A, B, C, chunk=chunk)
+    ref = naive_ssd(x, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_final_state_supports_streaming():
+    """Processing [first half] then [second half with carried state] must
+    equal processing the whole sequence (decode-path foundation)."""
+    rng = np.random.default_rng(1)
+    b, s, h, p, n = 1, 12, 2, 4, 3
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    A = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))) * 0.3, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    y_full, _ = ssd_chunked(x, A, B, C, chunk=4)
+    half = s // 2
+    y1, st1 = ssd_chunked(x[:, :half], A[:, :half], B[:, :half], C[:, :half],
+                          chunk=4)
+    y2, _ = ssd_chunked(x[:, half:], A[:, half:], B[:, half:], C[:, half:],
+                        chunk=4, initial_state=st1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)),
+        np.asarray(y_full), rtol=2e-4, atol=2e-4,
+    )
+
+
+@given(
+    qb=st.sampled_from([2, 4, 8, 16]),
+    kb=st.sampled_from([2, 4, 8, 16]),
+    causal=st.booleans(),
+    kv=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=20, deadline=None)
+def test_blockwise_attention_property(qb, kb, causal, kv):
+    rng = np.random.default_rng(qb * 100 + kb)
+    B, S, H, hd = 2, 16, 4, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, kv, hd)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=causal, q_block=qb, k_block=kb)
+    # naive reference
+    G = H // kv
+    qg = np.asarray(q).reshape(B, S, kv, G, hd)
+    s = np.einsum("bskgh,btkh->bkgst", qg, np.asarray(k)) * hd ** -0.5
+    if causal:
+        mask = np.tril(np.ones((S, S), bool))
+        s = np.where(mask[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    ref = np.einsum("bkgst,btkh->bskgh", p, np.asarray(v)).reshape(B, S, H, hd)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def _decode_matches_forward(cfg, api_forward, api_prefill, api_decode, batch):
+    """Greedy next-token logits from (prefill + decode) must match the
+    teacher-forced forward logits at the same positions."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    full = api_forward(tokens)  # (B, S, V)
+    _, caches = api_prefill(tokens[:, :-1], S + 4)
+    step_logits, _ = api_decode(caches, tokens[:, -1:])
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0]), np.asarray(full[:, -1]),
+        rtol=5e-3, atol=5e-3,
+    )
+
+
+def test_decode_matches_forward_dense():
+    cfg = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=97, head_dim=8,
+                      dtype="float32")
+    params, _ = T.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 97)
+    full = T.forward(params, cfg, toks)
+    _, caches = T.prefill(params, cfg, toks[:, :-1], max_len=16)
+    lg, _ = T.decode_step(params, cfg, caches, toks[:, -1:])
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_decode_matches_forward_ssm():
+    cfg = ModelConfig(arch_id="s", family="ssm", n_layers=2, d_model=32,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab=97,
+                      dtype="float32",
+                      ssm=SSMConfig(d_state=8, expand=2, headdim=8, chunk=4))
+    params, _ = H.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 97)
+    full = H.forward(params, cfg, toks)
+    _, caches = H.prefill(params, cfg, toks[:, :-1], max_len=16)
+    lg, _ = H.decode_step(params, cfg, caches, toks[:, -1:])
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_decode_matches_forward_hybrid():
+    cfg = ModelConfig(arch_id="h", family="hybrid", n_layers=4, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=97, head_dim=8,
+                      dtype="float32", attn_every=2,
+                      ssm=SSMConfig(d_state=8, expand=2, headdim=8, chunk=4))
+    params, _ = H.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 97)
+    full = H.forward(params, cfg, toks)
+    _, caches = H.prefill(params, cfg, toks[:, :-1], max_len=16)
+    lg, _ = H.decode_step(params, cfg, caches, toks[:, -1:])
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_decode_matches_forward_moe():
+    cfg = ModelConfig(arch_id="m", family="moe", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=97, head_dim=8,
+                      dtype="float32",
+                      moe=MoEConfig(n_experts=4, top_k=2, expert_ff=32,
+                                    moe_every=1, shared_expert_ff=16,
+                                    capacity_factor=4.0))
+    params, _ = T.init(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, 97)
+    full = T.forward(params, cfg, toks)
+    _, caches = T.prefill(params, cfg, toks[:, :-1], max_len=16)
+    lg, _ = T.decode_step(params, cfg, caches, toks[:, -1:])
+    # generous tolerance: the capacity factor differs between S=11 prefill
+    # and S=1 decode, but with cf=4 nothing drops in this regime
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_moe_routing_capacity_and_combine():
+    """Unit test for the sort-based dispatch: with capacity ample and top-1
+    routing, the MoE must equal running each token through its argmax
+    expert."""
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg = ModelConfig(arch_id="m", family="moe", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=1, d_ff=32, vocab=11, head_dim=8,
+                      dtype="float32",
+                      moe=MoEConfig(n_experts=4, top_k=1, expert_ff=16,
+                                    capacity_factor=8.0))
+    params_pa = moe_init(jax.random.key(0), cfg)
+    from repro.models.layers import split_params
+
+    params, _ = split_params(params_pa)
+    x = jax.random.normal(jax.random.key(1), (2, 6, 16))
+    out = moe_apply(params, cfg, x)
+
+    xf = np.asarray(x).reshape(-1, 16)
+    router = np.asarray(params["router"])
+    eidx = (xf @ router).argmax(-1)
+    want = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        e = eidx[t]
+        g = xf[t] @ np.asarray(params["w_gate"][e])
+        u = xf[t] @ np.asarray(params["w_up"][e])
+        act = (g / (1 + np.exp(-g))) * u
+        want[t] = act @ np.asarray(params["w_down"][e])
+    np.testing.assert_allclose(
+        np.asarray(out).reshape(-1, 16), want, rtol=2e-3, atol=2e-3
+    )

@@ -1,0 +1,243 @@
+"""Substrate tests: optimizer (f32 + 8-bit), quantization, compression,
+checkpointing (atomic/async/elastic), data determinism, fault loop."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, batch_at
+from repro.optim import (
+    AdamWConfig, compress_decompress, dequantize, init as adam_init,
+    quantize, update as adam_update, warmup_cosine,
+)
+from repro.runtime.fault import FaultTolerantLoop, LoopConfig, StepFailure
+
+
+# -- quantization --------------------------------------------------------------
+
+
+@given(
+    shape=st.sampled_from([(7,), (128,), (3, 130), (16, 16)]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=40, deadline=None)
+def test_quantize_roundtrip_error_bound(shape, seed):
+    x = jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape), jnp.float32
+    )
+    q = quantize(x)
+    y = dequantize(q)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # blockwise absmax int8: error <= absmax/254 per block
+    err = np.abs(np.asarray(y - x))
+    bound = np.abs(np.asarray(x)).max() / 254 + 1e-7
+    assert err.max() <= bound * 1.0001
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512), jnp.float32) * 1e-3
+    residual = jnp.zeros_like(g)
+    total_sent = jnp.zeros_like(g)
+    for _ in range(50):
+        sent, residual = compress_decompress(g, residual)
+        total_sent = total_sent + sent
+    # with error feedback the time-average converges to the true gradient
+    np.testing.assert_allclose(
+        np.asarray(total_sent / 50), np.asarray(g), atol=5e-6
+    )
+
+
+# -- optimizer ------------------------------------------------------------------
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray([2.0, -3.0, 1.5]), "b": jnp.asarray([0.5])}
+
+
+@pytest.mark.parametrize("moments", ["float32", "bfloat16", "int8"])
+def test_adamw_optimizes_quadratic(moments):
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, moments_dtype=moments)
+    params = _quadratic_params()
+    state = adam_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, metrics = adam_update(g, state, params, cfg)
+    assert float(loss(params)) < 1e-2, moments
+    assert jnp.isfinite(metrics["grad_norm"])
+
+
+def test_adamw_int8_states_are_actually_small():
+    cfg = AdamWConfig(moments_dtype="int8")
+    params = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
+    state = adam_init(params, cfg)
+    q = state.m["w"]
+    nbytes = q.q.size + q.scale.size * 4
+    assert nbytes < 1.1 * 1024 * 1024  # ~1.02 B/param vs 4 B/param f32
+
+
+def test_grad_clip_and_schedule():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.asarray([0.0])}
+    state = adam_init(params, cfg)
+    g = {"w": jnp.asarray([1e6])}
+    new_params, state, metrics = adam_update(g, state, params, cfg)
+    assert float(metrics["clip_scale"]) < 1e-5
+    assert abs(float(new_params["w"][0])) < 1.1  # clipped step
+    sched = warmup_cosine(10, 100)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0)
+    assert float(sched(100)) == pytest.approx(0.1, abs=1e-6)
+
+
+# -- checkpointing ---------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(6).reshape(2, 3), "n": {"b": jnp.ones(4)}}
+    ckpt.save(d, 10, tree, extra={"loss": 1.5})
+    ckpt.save(d, 20, jax.tree.map(lambda x: x * 2, tree))
+    assert ckpt.latest_step(d) == 20
+    restored, manifest = ckpt.restore(d, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]) * 2)
+    restored10, m10 = ckpt.restore(d, tree, step=10)
+    assert m10["extra"]["loss"] == 1.5
+    np.testing.assert_array_equal(np.asarray(restored10["n"]["b"]),
+                                  np.ones(4))
+
+
+def test_checkpoint_atomicity_tmp_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones(3)}
+    ckpt.save(d, 1, tree)
+    # simulate a crash mid-write of step 2
+    os.makedirs(os.path.join(d, "step_2.tmp"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = ckpt.CheckpointManager(d, keep=2)
+    tree = {"a": jnp.ones(3)}
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, jax.tree.map(lambda x: x * s, tree))
+    mgr.close()
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(d) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+    restored, _ = ckpt.restore(d, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), 4 * np.ones(3))
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save unsharded, restore with an explicit (different) sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(8.0)}
+    ckpt.save(d, 1, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored, _ = ckpt.restore(d, tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8.0))
+
+
+# -- data pipeline -----------------------------------------------------------------
+
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8)
+    b1, b2 = batch_at(cfg, 5), batch_at(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # two hosts partition the global batch exactly
+    h0 = batch_at(DataConfig(1000, 32, 8, n_hosts=2, host_id=0), 5)
+    h1 = batch_at(DataConfig(1000, 32, 8, n_hosts=2, host_id=1), 5)
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), b1["tokens"]
+    )
+    assert (batch_at(cfg, 6)["tokens"] != b1["tokens"]).any()
+
+
+# -- fault-tolerant loop --------------------------------------------------------------
+
+
+def test_fault_loop_restores_and_replays(tmp_path):
+    """Inject a failure; the loop must restore and converge to the same
+    final state a failure-free run produces (deterministic replay)."""
+    saved = {}
+
+    def make_loop(fail_at=None):
+        state0 = 0.0
+        calls = {"n": 0}
+
+        def step_fn(step, state):
+            if fail_at is not None and step == fail_at and calls["n"] == 0:
+                calls["n"] += 1
+                raise StepFailure("injected")
+            return state + step  # deterministic in step
+
+        def save_fn(step, state):
+            saved[step] = state
+
+        def restore_fn():
+            s = max(saved)
+            return s, saved[s]
+
+        return FaultTolerantLoop(
+            step_fn=step_fn, save_fn=save_fn, restore_fn=restore_fn,
+            config=LoopConfig(checkpoint_every=3, max_retries=2),
+        )
+
+    saved.clear(); saved[0] = 0.0
+    clean = make_loop(None).run(0.0, 0, 10)
+    saved.clear(); saved[0] = 0.0
+    loop = make_loop(fail_at=7)
+    faulty = loop.run(0.0, 0, 10)
+    assert faulty == clean
+    assert loop.report.failures == 1 and loop.report.restores == 1
+
+
+def test_fault_loop_escalates_after_retries():
+    def step_fn(step, state):
+        raise StepFailure("always")
+
+    loop = FaultTolerantLoop(
+        step_fn=step_fn, save_fn=lambda *a: None,
+        restore_fn=lambda: (0, 0.0),
+        config=LoopConfig(max_retries=2),
+    )
+    with pytest.raises(StepFailure):
+        loop.run(0.0, 0, 5)
+    assert loop.report.failures == 3
+
+
+def test_straggler_watchdog():
+    times = iter([0.0, 1.0,   # step 0: 1s
+                  1.0, 2.0,   # step 1
+                  2.0, 3.0, 3.0, 4.0, 4.0, 5.0,
+                  5.0, 30.0,  # step 5: 25s straggler
+                  30.0, 31.0, 31.0, 32.0])
+    loop = FaultTolerantLoop(
+        step_fn=lambda s, st: st,
+        save_fn=lambda *a: None,
+        restore_fn=lambda: (0, 0.0),
+        config=LoopConfig(checkpoint_every=1000, straggler_factor=3.0),
+        clock=lambda: next(times),
+    )
+    loop.run(0.0, 0, 8)
+    assert 5 in loop.report.straggler_events

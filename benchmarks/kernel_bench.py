@@ -1,16 +1,25 @@
-"""Kernel benches: block-shape sweep for the Pallas matmul.
+"""Kernel benches: block-shape sweep + generated-kernel scenarios.
 
 No TPU in this container, so wall-clock is the interpret-mode *correctness*
 path only; the reported ``derived`` column is the analytic HBM-traffic model
 (core.autotune napkin math) that ranks block shapes for the real chip —
 this is the §Perf lever for the kernel level.
+
+The ``gen.*`` rows go through ``repro.codegen``: the schedule-driven
+generator compiling plain / batched / chained / transposed contractions
+(none of which had kernels before the generator existed), checked against
+the hand-written baseline and jnp references.  ``--smoke`` (or
+``run(smoke=True)``) keeps shapes tiny for CI.
 """
+
+import argparse
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import choose_matmul_blocks
 from repro.core.cost import TPU
+from repro.core.enumerate import matmul_spec
 from repro.kernels.matmul.matmul import matmul_pallas
 from repro.kernels.matmul.ref import matmul_ref
 
@@ -21,7 +30,78 @@ def traffic(m, n, k, bm, bn, bk):
     return m * k * (n / bn) + k * n * (m / bm) + m * n
 
 
-def run():
+def _rnd(*shape, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape), jnp.float32
+    )
+
+
+def _bench_generated(smoke: bool):
+    """Generated kernels vs references, interpret mode (CPU container)."""
+    from repro import codegen
+
+    s = 2 if smoke else 1
+    m, k, n = 128 // s, 128 // s, 128 // s
+    a, b = _rnd(m, k, seed=0), _rnd(k, n, seed=1)
+
+    spec = matmul_spec(m, k, n)
+    sched = codegen.default_schedule(spec, {"i": 32, "k": 32, "j": 32})
+    kern = codegen.compile(spec, sched, interpret=True)
+    t = timeit(lambda: np.asarray(kern(a, b)), repeats=1)
+    err = np.abs(np.asarray(kern(a, b)) - np.asarray(matmul_ref(a, b))).max()
+    emit("kernel.gen.matmul", t, f"max_err={err:.2e}")
+
+    base = np.abs(
+        np.asarray(
+            matmul_pallas(a, b, block_m=32, block_n=32, block_k=32,
+                          interpret=True)
+        ) - np.asarray(kern(a, b))
+    ).max()
+    emit("kernel.gen.vs_handwritten", 0.0, f"max_err={base:.2e}")
+
+    bsz = 2 if smoke else 4
+    sb = codegen.batched_matmul_schedule(
+        bsz, m // 2, k // 2, n // 2, block_m=16, block_n=16, block_k=16
+    )
+    ab = _rnd(bsz, m // 2, k // 2, seed=2)
+    bb = _rnd(bsz, k // 2, n // 2, seed=3)
+    kb = codegen.compile(sb.spec, sb, interpret=True)
+    t = timeit(lambda: np.asarray(kb(ab, bb)), repeats=1)
+    err = np.abs(
+        np.asarray(kb(ab, bb))
+        - np.einsum("bij,bjk->bik", np.asarray(ab), np.asarray(bb))
+    ).max()
+    emit("kernel.gen.batched", t, f"max_err={err:.2e}")
+
+    sc = codegen.chain_matmul_schedule(
+        m // 2, k // 2, k // 2, n // 2,
+        block_m=16, block_n=16, block_k1=16, block_k2=16,
+    )
+    ac, bc = _rnd(m // 2, k // 2, seed=4), _rnd(k // 2, k // 2, seed=5)
+    cc = _rnd(k // 2, n // 2, seed=6)
+    kc = codegen.compile(sc.spec, sc, interpret=True)
+    t = timeit(lambda: np.asarray(kc(ac, bc, cc)), repeats=1)
+    err = np.abs(
+        np.asarray(kc(ac, bc, cc))
+        - np.einsum("ij,jk,kl->il", *(np.asarray(x) for x in (ac, bc, cc)))
+    ).max()
+    emit("kernel.gen.chain", t, f"max_err={err:.2e}")
+
+    st = codegen.transposed_matmul_schedule(
+        m // 2, k // 2, n // 2, block_m=16, block_n=16, block_k=16
+    )
+    at = _rnd(k // 2, m // 2, seed=7)
+    bt = _rnd(k // 2, n // 2, seed=8)
+    kt = codegen.compile(st.spec, st, interpret=True)
+    t = timeit(lambda: np.asarray(kt(at, bt)), repeats=1)
+    err = np.abs(
+        np.asarray(kt(at, bt))
+        - np.einsum("ji,jk->ik", np.asarray(at), np.asarray(bt))
+    ).max()
+    emit("kernel.gen.transposed", t, f"max_err={err:.2e}")
+
+
+def run(smoke: bool = False):
     m = n = k = 4096
     cands = [
         (128, 128, 512), (256, 256, 512), (512, 512, 512),
@@ -40,10 +120,8 @@ def run():
     emit("kernel.matmul.autotuned", 0.0, f"blocks={best}")
 
     # interpret-mode correctness spot-check at a scaled-down shape
-    a = jnp.asarray(np.random.default_rng(0).standard_normal((128, 128)),
-                    jnp.float32)
-    b = jnp.asarray(np.random.default_rng(1).standard_normal((128, 128)),
-                    jnp.float32)
+    a = _rnd(128, 128, seed=0)
+    b = _rnd(128, 128, seed=1)
     t = timeit(
         lambda: np.asarray(
             matmul_pallas(a, b, block_m=64, block_n=64, block_k=64,
@@ -59,6 +137,13 @@ def run():
     ).max()
     emit("kernel.matmul.interpret_check", t, f"max_err={err:.2e}")
 
+    _bench_generated(smoke)
+
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""CI smoke bench: run kernel_bench --smoke through the generator path.
+
+Executes ``python -m benchmarks.kernel_bench --smoke`` with PYTHONPATH set,
+parses the CSV rows, and fails if any generated-kernel row is missing or
+reports max_err above tolerance.  Keeps the codegen path exercised on every
+push without a TPU.
+
+Usage: python scripts/bench_smoke.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+TOL = 1e-3
+REQUIRED = [
+    "kernel.gen.matmul",
+    "kernel.gen.vs_handwritten",
+    "kernel.gen.batched",
+    "kernel.gen.chain",
+    "kernel.gen.transposed",
+]
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kernel_bench", "--smoke"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=1800,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    if proc.returncode != 0:
+        print(f"FAIL: kernel_bench exited {proc.returncode}")
+        return 1
+    errs = {}
+    for line in proc.stdout.splitlines():
+        m = re.match(r"([\w.]+),[^,]*,.*max_err=([\d.eE+-]+)", line)
+        if m:
+            errs[m.group(1)] = float(m.group(2))
+    bad = []
+    for name in REQUIRED:
+        if name not in errs:
+            bad.append(f"{name}: missing from bench output")
+        elif errs[name] > TOL:
+            bad.append(f"{name}: max_err {errs[name]:.3g} > {TOL}")
+    if bad:
+        print("FAIL:\n  " + "\n  ".join(bad))
+        return 1
+    print(f"OK: {len(REQUIRED)} generated-kernel benches within {TOL}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

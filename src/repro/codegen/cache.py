@@ -1,0 +1,168 @@
+"""Disk-backed autotune cache: pay tuning cost once per fleet, not per run.
+
+The ROADMAP "serve heavy traffic" requirement implies tuning cannot happen
+per-process: a serving replica must pick up the fleet's tuned schedules at
+startup.  This cache is a JSON file (human-inspectable, mergeable) mapping
+
+    key = sha256(spec signature, shapes, dtype, hardware, tuner version)
+
+to a serialized winner — either a full ``Schedule`` (split chain + tier
+levels, see ``schedule_to_dict``) or an arbitrary small JSON value such as
+``choose_matmul_blocks`` output or measured variant rankings.
+
+Concurrency: reads are lazy, writes are atomic (tmp file + ``os.replace``)
+and re-read the file first, so concurrent tuners lose at most their own
+last write, never corrupt the file.  A corrupt/alien file degrades to an
+empty cache rather than an error.
+
+Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+from ..core.enumerate import ContractionSpec
+from ..core.schedule import Level, Schedule
+
+#: bump when the serialized schedule format or tuner logic changes
+CACHE_VERSION = 1
+
+
+def spec_signature(spec: ContractionSpec) -> Dict[str, Any]:
+    """Stable JSON identity of a ROOT contraction (shapes included)."""
+    root = spec.root()
+    return {
+        "name": root.name,
+        "operands": {k: list(v) for k, v in root.operands.items()},
+        "output": list(root.output),
+        "extents": {k: int(v) for k, v in root.extents.items()},
+        "reducer": root.reducer,
+    }
+
+
+def hardware_fingerprint() -> str:
+    """backend + device kind; 'cpu/interpret' in the CPU container."""
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        return f"{jax.default_backend()}/{getattr(dev, 'device_kind', '?')}"
+    except Exception:
+        return "unknown"
+
+
+def cache_key(
+    spec: ContractionSpec,
+    *,
+    dtype: Any = None,
+    hardware: Optional[str] = None,
+    extra: Any = None,
+) -> str:
+    payload = {
+        "v": CACHE_VERSION,
+        "spec": spec_signature(spec),
+        "dtype": str(dtype) if dtype is not None else None,
+        "hw": hardware if hardware is not None else hardware_fingerprint(),
+        "extra": extra,
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def schedule_to_dict(schedule: Schedule) -> Dict[str, Any]:
+    return {
+        "splits": [[i, int(b)] for i, b in schedule.spec.split_chain()],
+        "levels": [
+            [l.index, l.tier, int(l.extent)] for l in schedule.levels
+        ],
+    }
+
+
+def schedule_from_dict(d: Dict[str, Any], root: ContractionSpec) -> Schedule:
+    spec = root.root()
+    for index, b in d["splits"]:
+        spec = spec.subdivide(index, b)
+    levels = tuple(Level(i, t, e) for i, t, e in d["levels"])
+    return Schedule(spec, levels).validate()
+
+
+class AutotuneCache:
+    """get/put JSON values keyed by ``cache_key`` strings."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._data: Optional[Dict[str, Any]] = None
+
+    # -- stats, for tests and ops dashboards --------------------------------
+    hits: int = 0
+    misses: int = 0
+
+    def _load(self) -> Dict[str, Any]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                self._data = raw if isinstance(raw, dict) else {}
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> Optional[Any]:
+        with self._lock:
+            val = self._load().get(key)
+        if val is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return val
+
+    def put(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._data = None  # merge with concurrent writers
+            data = dict(self._load())
+            data[key] = value
+            self._data = data
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(data, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data = {}
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
+
+_default: Optional[AutotuneCache] = None
+
+
+def default_cache() -> AutotuneCache:
+    """Process-wide cache at $REPRO_AUTOTUNE_CACHE or ~/.cache/repro."""
+    global _default
+    path = os.environ.get("REPRO_AUTOTUNE_CACHE") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json"
+    )
+    if _default is None or _default.path != path:
+        _default = AutotuneCache(path)
+    return _default

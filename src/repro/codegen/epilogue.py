@@ -1,0 +1,79 @@
+"""Epilogue hook: fused tail computation on the resident accumulator tile.
+
+The paper's NN motivating example (eqs 3-5) is a dense layer whose
+normalization + nonlinearity stages are low arithmetic density — fusing
+them into the matmul epilogue saves the HBM round-trips of materializing
+``y`` and ``z``.  The generator runs the epilogue on the float32 VMEM
+accumulator right before the store, subsuming the hand-written
+``kernels/fused_dense_act`` kernel:
+
+    y = acc * scale + bias            (bias/scale broadcast over the last
+    z = (y - mean) * rsqrt(var+eps)    output axis, each optional)
+    r = act(z)
+
+Vector operands (bias/mean/var/scale) ride along as extra kernel inputs
+blocked on the last output axis, so they stream with the output tile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "relu": lambda z: jnp.maximum(z, 0.0),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "silu": jax.nn.silu,
+    "id": lambda z: z,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Which fused tail stages the generated kernel applies."""
+
+    act: str = "id"
+    bias: bool = False
+    scale: bool = False
+    norm: bool = False          # normalize with given (mean, var) stats
+    eps: float = 1e-5
+
+    def __post_init__(self):
+        if self.act not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown activation {self.act!r}; have {sorted(ACTIVATIONS)}"
+            )
+
+    @property
+    def vector_names(self) -> Tuple[str, ...]:
+        """Extra kernel operands, in argument order."""
+        names = []
+        if self.scale:
+            names.append("scale")
+        if self.bias:
+            names.append("bias")
+        if self.norm:
+            names.extend(["mean", "var"])
+        return tuple(names)
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.vector_names and self.act == "id"
+
+    def apply(self, acc, vectors: Dict[str, jax.Array]):
+        """Run the tail on the f32 accumulator tile; vectors are f32 rows
+        broadcastable against ``acc`` (the generator reshapes them)."""
+        y = acc
+        if self.scale:
+            y = y * vectors["scale"]
+        if self.bias:
+            y = y + vectors["bias"]
+        if self.norm:
+            y = (y - vectors["mean"]) * jax.lax.rsqrt(
+                vectors["var"] + self.eps
+            )
+        return ACTIVATIONS[self.act](y)

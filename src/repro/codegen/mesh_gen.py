@@ -1,0 +1,115 @@
+"""Mesh tiers -> shard_map: the cluster/device half of the hierarchy.
+
+A ``mesh:*`` level shards its root index over the named mesh axis:
+
+  * map (output) indices  -> the operand and output axes are partitioned
+    with a ``PartitionSpec`` entry naming the mesh axis;
+  * reduce indices        -> operands are partitioned, each shard computes
+    a partial contraction, and a ``lax.psum`` over the axis completes the
+    reduction (the generated analogue of the reduce-scatter the launch
+    layer does for gradients).
+
+``bind_mesh`` wraps a ``CompiledKernel`` (which always works on local,
+per-shard shapes) into a callable over global arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from .plan import KernelPlan
+
+
+def _axis_entry(plan: KernelPlan, index: str):
+    axes = plan.axes[index].mesh_axes
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def operand_partition_spec(plan: KernelPlan, name: str) -> P:
+    return P(*(_axis_entry(plan, i) for i in plan.spec.operands[name]))
+
+
+def output_partition_spec(plan: KernelPlan) -> P:
+    return P(*(_axis_entry(plan, i) for i in plan.spec.output))
+
+
+def reduce_mesh_axes(plan: KernelPlan) -> Tuple[str, ...]:
+    """Mesh axes carrying a reduce index (need a psum to finish)."""
+    out = []
+    for r in plan.spec.reduce_indices:
+        out.extend(plan.axes[r].mesh_axes)
+    return tuple(out)
+
+
+def bind_mesh(kernel, mesh):
+    """Wrap a CompiledKernel into a shard_map over ``mesh``.
+
+    Returns ``call(*operands, **epilogue_vectors)`` on GLOBAL arrays.
+    Epilogue vectors are sharded like the last output axis.
+
+    Ordering with sharded reductions: the epilogue must see the FULL sum,
+    not per-shard partials — act(psum(partial) + bias), never
+    psum(act(partial + bias)).  When a reduce index is mesh-sharded the
+    in-kernel epilogue is disabled and re-applied here after the psum.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    plan = kernel.plan
+    names = kernel.names
+    epilogue = kernel.epilogue
+    vec_names = epilogue.vector_names if epilogue else ()
+    in_specs = tuple(operand_partition_spec(plan, n) for n in names)
+    vec_spec = P(_axis_entry(plan, plan.spec.output[-1]))
+    psum_axes = reduce_mesh_axes(plan)
+    out_spec = output_partition_spec(plan)
+
+    defer_epilogue = bool(psum_axes) and epilogue is not None and (
+        not epilogue.is_identity
+    )
+    inner = kernel
+    if defer_epilogue:
+        inner = dataclasses.replace(
+            kernel, epilogue=None, out_dtype=jnp.float32, _fn=None
+        )
+    out_rank = len(plan.spec.output)
+
+    def local_fn(*args):
+        ops = args[: len(names)]
+        vecs = args[len(names) :]
+        out = inner._fn(*ops) if defer_epilogue else inner._fn(*args)
+        if psum_axes:
+            out = lax.psum(out, psum_axes)
+        if defer_epilogue:
+            vectors = {
+                nm: v.astype(jnp.float32).reshape(
+                    (1,) * (out_rank - 1) + (-1,)
+                )
+                for nm, v in zip(vec_names, vecs)
+            }
+            out_dtype = kernel.out_dtype or ops[0].dtype
+            out = epilogue.apply(out, vectors).astype(out_dtype)
+        return out
+
+    wrapped = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=in_specs + (vec_spec,) * len(vec_names),
+        out_specs=out_spec,
+        check_rep=False,
+    )
+
+    def call(*arrays, **vectors):
+        missing = set(vec_names) - set(vectors)
+        if missing:
+            raise TypeError(f"epilogue vectors missing: {sorted(missing)}")
+        return wrapped(*arrays, *(vectors[v] for v in vec_names))
+
+    return call

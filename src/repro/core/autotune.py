@@ -51,6 +51,63 @@ def enumerate_subdivided(
     return specs
 
 
+def _tune_cache_key(spec, subdiv_candidates, cost_fn, keep, measure_with):
+    """NB: cost_fn is identified by module+qualname — pass a NAMED function
+    when caching; two lambdas defined at the same spot would collide."""
+    from ..codegen.cache import cache_key
+
+    return cache_key(
+        spec,
+        extra={
+            "what": "tune.variants",
+            "subdiv": {
+                k: sorted(int(b) for b in v)
+                for k, v in (subdiv_candidates or {}).items()
+            },
+            "cost_fn": (
+                getattr(cost_fn, "__module__", "")
+                + ":"
+                + getattr(
+                    cost_fn, "__qualname__",
+                    getattr(cost_fn, "__name__", repr(cost_fn)),
+                )
+            ),
+            "keep": keep,
+            "measured": measure_with is not None
+            and {
+                k: [list(np.shape(a)), str(np.asarray(a).dtype)]
+                for k, a in measure_with.items()
+            },
+        },
+    )
+
+
+def _variants_to_json(survivors: List[TunedVariant]) -> list:
+    return [
+        {
+            "order": list(tv.order),
+            "splits": [[i, int(b)] for i, b in tv.spec.split_chain()],
+            "predicted": float(tv.predicted_cost),
+            "measured": tv.measured_s,
+        }
+        for tv in survivors
+    ]
+
+
+def _variants_from_json(data: list, root: ContractionSpec) -> List[TunedVariant]:
+    out = []
+    for d in data:
+        s = root.root()
+        for index, b in d["splits"]:
+            s = s.subdivide(index, b)
+        out.append(
+            TunedVariant(
+                tuple(d["order"]), s, d["predicted"], d.get("measured")
+            )
+        )
+    return out
+
+
 def tune(
     spec: ContractionSpec,
     subdiv_candidates: Optional[Dict[str, Sequence[int]]] = None,
@@ -58,8 +115,20 @@ def tune(
     keep: int = 4,
     measure_with: Optional[Dict[str, np.ndarray]] = None,
     repeats: int = 3,
+    cache=None,
 ) -> List[TunedVariant]:
-    """Full enumerate -> cut -> (measure) pipeline; best variant first."""
+    """Full enumerate -> cut -> (measure) pipeline; best variant first.
+
+    ``cache`` (a ``codegen.cache.AutotuneCache``) persists the survivor
+    list keyed by spec + subdiv candidates + cost model + measurement
+    shapes: a repeated call — in this process or any later one — returns
+    the stored ranking without re-enumerating or re-measuring.
+    """
+    if cache is not None:
+        key = _tune_cache_key(spec, subdiv_candidates, cost_fn, keep, measure_with)
+        hit = cache.get(key)
+        if hit is not None:
+            return _variants_from_json(hit, spec)
     specs = (
         enumerate_subdivided(spec, subdiv_candidates)
         if subdiv_candidates
@@ -80,6 +149,8 @@ def tune(
                 best = min(best, time.perf_counter() - t0)
             tv.measured_s = best
         survivors.sort(key=lambda tv: tv.measured_s)
+    if cache is not None:
+        cache.put(key, _variants_to_json(survivors))
     return survivors
 
 
@@ -106,11 +177,16 @@ def choose_matmul_blocks(
     """
     budget = hw["vmem_bytes"] // (2 if double_buffer else 1) // elem_bytes
 
-    def aligned(x: int, size: int) -> List[int]:
-        outs = [c for c in (128, 256, 512, 1024) if c <= size and size % c == 0]
+    def aligned(align: int, size: int, cap: int = 1024) -> List[int]:
+        """Divisors of ``size`` that are pow2 multiples of ``align``."""
+        outs, c = [], align
+        while c <= min(size, cap):
+            if size % c == 0:
+                outs.append(c)
+            c *= 2
         return outs or [size]
 
-    best, best_traffic = None, math.inf
+    best, best_score = None, None
     for bm in aligned(8, m):
         for bn in aligned(128, n):
             for bk in aligned(128, k):
@@ -119,9 +195,8 @@ def choose_matmul_blocks(
                 traffic = m * k * (n / bn) + k * n * (m / bm) + m * n
                 # prefer deeper k-blocks on ties (fewer grid steps)
                 score = (traffic, -bk, -(bm * bn))
-                if score < (best_traffic, 0, 0) or best is None:
-                    if traffic < best_traffic or best is None:
-                        best, best_traffic = (bm, bn, bk), traffic
+                if best is None or score < best_score:
+                    best, best_score = (bm, bn, bk), score
     if best is None:  # tiny problem: single block
         best = (m, n, k)
     return best

@@ -187,6 +187,43 @@ def weighted_matmul_spec(n: int, m: int, k: int) -> ContractionSpec:
     )
 
 
+def batched_matmul_spec(b: int, n: int, m: int, k: int) -> ContractionSpec:
+    """out[b,i,k] = sum_j A[b,i,j] B[b,j,k] — the serving/attention shape."""
+    return ContractionSpec(
+        name="batched_matmul",
+        operands={"A": ("b", "i", "j"), "B": ("b", "j", "k")},
+        output=("b", "i", "k"),
+        extents={"b": b, "i": n, "j": m, "k": k},
+    )
+
+
+def chain_matmul_spec(n: int, m: int, p: int, q: int) -> ContractionSpec:
+    """out[i,l] = sum_{j,k} A[i,j] B[j,k] C[k,l] — the A@B@C chain.
+
+    A single spec with two reduce indices: the per-block contraction is
+    multilinear in each reduction block, so summing block-local
+    einsum("ij,jk,kl->il") terms over (jo, ko) chunks reproduces the
+    chained product exactly (no intermediate matrix is materialized in
+    HBM — the paper's fusion claim applied across *two* contractions).
+    """
+    return ContractionSpec(
+        name="chain_matmul",
+        operands={"A": ("i", "j"), "B": ("j", "k"), "C": ("k", "l")},
+        output=("i", "l"),
+        extents={"i": n, "j": m, "k": p, "l": q},
+    )
+
+
+def transposed_matmul_spec(n: int, m: int, k: int) -> ContractionSpec:
+    """out[i,k] = sum_j A[j,i] B[j,k] — A stored transposed (weight grads)."""
+    return ContractionSpec(
+        name="transposed_matmul",
+        operands={"A": ("j", "i"), "B": ("j", "k")},
+        output=("i", "k"),
+        extents={"i": n, "j": m, "k": k},
+    )
+
+
 def tensor_contraction_spec(n: int, m: int, k: int, p: int, q: int) -> ContractionSpec:
     """C_ipq = sum_jk A_ijk B_jp C_kq g_j f_k (paper eq 7, PDE-style)."""
     return ContractionSpec(

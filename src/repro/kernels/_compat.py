@@ -1,0 +1,12 @@
+"""Pallas API compatibility shims shared by hand-written and generated kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+releases; the pinned jax==0.4.37 ships the old name.  Kernels must not
+care which one exists.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

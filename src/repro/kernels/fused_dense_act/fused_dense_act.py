@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .._compat import CompilerParams
+
 _ACTIVATIONS = {
     "relu": lambda z: jnp.maximum(z, 0.0),
     "gelu": jax.nn.gelu,
@@ -85,7 +87,7 @@ def fused_dense_act_pallas(
         out_specs=pl.BlockSpec((block_b, block_k), lambda bi, ki, ii: (bi, ki)),
         out_shape=jax.ShapeDtypeStruct((b, k), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_b, block_k), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,4 +1,9 @@
-"""Jit'd wrapper for the fused dense+norm+activation kernel."""
+"""Jit'd wrapper for fused dense+norm+activation: generated epilogue first.
+
+The schedule-driven generator subsumes this kernel (an ``Epilogue`` on the
+generated matmul); the hand-written ``fused_dense_act_pallas`` stays as
+the verification baseline, reachable with ``use_generated=False``.
+"""
 
 from __future__ import annotations
 
@@ -11,9 +16,35 @@ from .fused_dense_act import fused_dense_act_pallas
 from .ref import fused_dense_act_ref
 
 
+def _generated(x, w, beta, mean, var, act, eps,
+               block_b, block_k, block_i, interpret):
+    from ... import codegen
+    from ...core.enumerate import matmul_spec
+
+    b, i = x.shape
+    _, k = w.shape
+    spec = matmul_spec(b, i, k)
+    if block_b is None:
+        # no caller-pinned blocks: the generator's tuner budgets the
+        # resident reduce axis correctly (choose_matmul_blocks does not)
+        schedule = codegen.tune_schedule(spec, dtype=x.dtype)
+    else:
+        schedule = codegen.default_schedule(
+            spec, {"i": block_b, "k": block_k, "j": block_i}
+        )
+    epi = codegen.Epilogue(act=act, bias=True, norm=True, eps=eps)
+    kern = codegen.cached_compile(
+        spec, schedule, epilogue=epi, interpret=interpret
+    )
+    return kern(x, w, bias=beta, mean=mean, var=var)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("act", "eps", "block_b", "block_k", "block_i", "interpret"),
+    static_argnames=(
+        "act", "eps", "block_b", "block_k", "block_i", "interpret",
+        "use_generated",
+    ),
 )
 def fused_dense_act(
     x, w, beta, mean, var,
@@ -22,15 +53,25 @@ def fused_dense_act(
     block_k: int | None = None,
     block_i: int | None = None,
     interpret: bool = False,
+    use_generated: bool = True,
 ):
     if not interpret and jax.default_backend() != "tpu":
         return fused_dense_act_ref(x, w, beta, mean, var, act=act, eps=eps)
     b, i = x.shape
     _, k = w.shape
+    if use_generated and block_b is None and block_k is None and block_i is None:
+        return _generated(
+            x, w, beta, mean, var, act, eps, None, None, None, interpret
+        )
     if block_b is None or block_k is None or block_i is None:
         bb, bk, bi = choose_matmul_blocks(b, k, i, elem_bytes=x.dtype.itemsize)
         block_b, block_k, block_i = (
             block_b or bb, block_k or bk, block_i or bi
+        )
+    if use_generated:
+        return _generated(
+            x, w, beta, mean, var, act, eps,
+            block_b, block_k, block_i, interpret,
         )
     return fused_dense_act_pallas(
         x, w, beta, mean, var, act=act, eps=eps,

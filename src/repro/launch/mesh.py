@@ -15,25 +15,53 @@ config choice in launch.train.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 has explicit axis types; 0.4.37 (pinned) does not
+    from jax.sharding import AxisType
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+
+except ImportError:
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires >= prod(shape) local devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple:
     """Mesh axes that carve the global batch (pod+data when present)."""
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)
+
+
+# -- jax version compat shims -------------------------------------------------
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh``: jax.set_mesh when it exists
+    (jax >= 0.6), else the Mesh object itself (the 0.4.x context API)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(axis_name: str) -> int:
+    """lax.axis_size where available; psum(1) constant-folds on 0.4.37."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)

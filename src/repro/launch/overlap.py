@@ -31,7 +31,9 @@ def ring_gather_matmul(x_shard: jax.Array, w: jax.Array, axis_name: str):
     The explicit ring exposes the overlap to the scheduler; the naive form
     must finish the all-gather before the first flop.
     """
-    p = lax.axis_size(axis_name)
+    from .mesh import axis_size
+
+    p = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
 
     def step(carry, _):

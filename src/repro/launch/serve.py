@@ -37,12 +37,23 @@ class BatchServer:
     """Fixed-slot batch server (the slot count is the serving batch size)."""
 
     def __init__(self, cfg, *, batch_size: int, max_len: int,
-                 extra_batch=None):
+                 extra_batch=None, warm_gemms=()):
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
         self.extra_batch = extra_batch or {}
+        # Serving replicas reuse the fleet's tuned kernel schedules: warm
+        # the persistent codegen cache before the first request arrives.
+        if warm_gemms:
+            from ..codegen import default_cache
+            from ..ops import warm_dense_cache
+
+            cache = default_cache()
+            n = warm_dense_cache(warm_gemms)
+            print(f"[serve] warmed {n} GEMM schedule(s) "
+                  f"(cache {cache.path}: {cache.hits} hit, "
+                  f"{cache.misses} miss)")
         self.params, _ = self.api.init(cfg, jax.random.key(0))
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, self.cfg, c, t)
@@ -96,6 +107,11 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument(
+        "--warm-gemms", default="",
+        help="semicolon-separated M,K,N GEMM shapes to pre-tune "
+             "through the codegen cache, e.g. '4096,4096,4096;128,4096,512'",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,10 +128,23 @@ def main():
         )
         for i in range(args.requests)
     ]
+    try:
+        warm = tuple(
+            tuple(int(x) for x in part.split(","))
+            for part in args.warm_gemms.split(";")
+            if part.strip()
+        )
+        if any(len(t) != 3 for t in warm):
+            raise ValueError(warm)
+    except ValueError:
+        ap.error(
+            f"--warm-gemms expects 'M,K,N[;M,K,N...]', got {args.warm_gemms!r}"
+        )
     server = BatchServer(
         cfg,
         batch_size=args.requests,
         max_len=args.prompt_len + args.max_new + 1,
+        warm_gemms=warm,
     )
     stats = server.run(reqs)
     print(

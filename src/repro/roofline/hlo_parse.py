@@ -40,6 +40,22 @@ _CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"\bconstant\((\d+)\)")
 _OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+def _split_operands(opstr: str) -> List[str]:
+    """Split a dot operand list on commas OUTSIDE []/{} (shape commas)."""
+    out, depth, cur = [], 0, []
+    for ch in opstr:
+        if ch in "[{(":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
 
 _COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -162,18 +178,24 @@ def _analyze_computation(lines: List[str]) -> CompStats:
                 contract = 0
                 op_bytes = 0.0
                 if opm:
-                    names = [
-                        t.strip().lstrip("%")
-                        for t in opm.group(1).split(",")
-                    ]
-                    for nm in names:
-                        sh = symbols.get(nm)
+                    # one entry per operand token, positional: jax<=0.4.x
+                    # prints inline types (``f32[8,16]{1,0} %name``),
+                    # newer HLO just ``%name`` (sigil optional) — resolve
+                    # the type if present, else the symbol table
+                    shapes = []
+                    for tok in _split_operands(opm.group(1)):
+                        sh = _first_shape(tok)
+                        if sh is None and tok:
+                            nm = tok.split()[-1].lstrip("%")
+                            sh = symbols.get(nm)
+                        shapes.append(sh)
+                    for sh in shapes:
                         if sh:
                             n = 1
                             for d in sh[1]:
                                 n *= d
                             op_bytes += n * _DTYPE_BYTES.get(sh[0], 4)
-                    lhs = symbols.get(names[0]) if names else None
+                    lhs = shapes[0] if shapes else None
                     if lhs and ctm:
                         dims = [int(d) for d in ctm.group(1).split(",") if d]
                         contract = 1

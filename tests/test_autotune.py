@@ -1,0 +1,60 @@
+"""core.autotune block selection: alignment + tie-break regressions."""
+
+import math
+
+import pytest
+
+from repro.core.autotune import choose_matmul_blocks
+from repro.core.cost import TPU
+
+
+def traffic(m, n, k, bm, bn, bk):
+    return m * k * (n / bn) + k * n * (m / bm) + m * n
+
+
+def test_blocks_divide_and_fit_vmem():
+    for m, n, k in [(4096, 4096, 4096), (512, 2048, 1024), (256, 256, 8192)]:
+        bm, bn, bk = choose_matmul_blocks(m, n, k, elem_bytes=2)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        budget = TPU["vmem_bytes"] // 2 // 2
+        assert bm * bk + bk * bn + bm * bn <= budget
+
+
+def test_aligned_candidates_honor_alignment():
+    """The aligned() helper must produce multiples of its alignment arg:
+    bm candidates are sublane (8) multiples even when m < 128."""
+    bm, bn, bk = choose_matmul_blocks(32, 4096, 4096, elem_bytes=4)
+    assert bm % 8 == 0 and bm <= 32
+    assert bn % 128 == 0 and bk % 128 == 0
+
+
+def test_small_m_gets_sublane_aligned_blocks():
+    # before the fix, aligned(8, m) for m=64 fell back to [64] only;
+    # now 8/16/32/64 are all candidates and the optimizer can trade bm
+    # against bn under the VMEM budget
+    bm, _, _ = choose_matmul_blocks(64, 8192, 8192, elem_bytes=4)
+    assert bm % 8 == 0
+
+
+def test_tie_break_prefers_deeper_k_blocks():
+    """Equal-traffic candidates must pick the larger block_k (fewer grid
+    steps) — the tie-break the seed left as dead code."""
+    m = n = 256
+    k = 1024
+    bm, bn, bk = choose_matmul_blocks(m, n, k, elem_bytes=2)
+    # whole-m/whole-n blocks make traffic independent of bk: every bk
+    # candidate ties, so the deepest one must win
+    assert (bm, bn) == (256, 256)
+    best_traffic = traffic(m, n, k, bm, bn, bk)
+    budget = TPU["vmem_bytes"] // 2 // 2
+    deeper = [
+        c for c in (128, 256, 512, 1024)
+        if k % c == 0 and c > bk
+        and bm * c + c * bn + bm * bn <= budget
+        and traffic(m, n, k, bm, bn, c) <= best_traffic
+    ]
+    assert not deeper, f"deeper tied block_k {deeper} should have won over {bk}"
+
+
+def test_tiny_problem_single_block():
+    assert choose_matmul_blocks(4, 4, 4) == (4, 4, 4)

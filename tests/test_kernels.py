@@ -20,8 +20,11 @@ def rnd(*shape, dtype=jnp.float32, seed=0):
     return jnp.asarray(x, dtype=dtype)
 
 
+# bf16 atol covers 1-ulp noise from blocked accumulation order: outputs of
+# magnitude ~16 have ulp 0.125, and small outputs inherit absolute error
+# from the large intermediate sums they cancel down from.
 TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
-       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+       jnp.bfloat16: dict(rtol=2e-2, atol=1e-1)}
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -110,12 +110,15 @@ def test_debug_mesh_train_bundle_compiles():
         cfg = get_config("qwen3-8b").smoke()
         mesh = make_debug_mesh((2, 2), ("data", "model"))
         shape = ShapeConfig("tiny", 32, 8, "train")
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import set_mesh
+        with set_mesh(mesh):
             b = train_bundle(mesh, cfg, shape)
             compiled = jax.jit(
                 b.fn, out_shardings=b.out_shardings
             ).lower(*b.in_shapes).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # jax 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         print("FLOPS", cost.get("flops", 0))
         print("OK")
     """)
@@ -133,7 +136,8 @@ def test_debug_mesh_serve_bundle_compiles():
         cfg = get_config("granite-34b").smoke()   # MQA decode path
         mesh = make_debug_mesh((2, 2), ("data", "model"))
         shape = ShapeConfig("tinydecode", 64, 8, "decode")
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import set_mesh
+        with set_mesh(mesh):
             b = serve_bundle(mesh, cfg, shape)
             compiled = jax.jit(
                 b.fn, out_shardings=b.out_shardings
@@ -159,7 +163,8 @@ def test_train_step_runs_on_mesh_and_loss_decreases():
         cfg = get_config("deepseek-7b").smoke()
         api = get_api(cfg)
         mesh = make_debug_mesh((2, 2), ("data", "model"))
-        with jax.set_mesh(mesh):
+        from repro.launch.mesh import set_mesh
+        with set_mesh(mesh):
             params, _ = api.init(cfg, jax.random.key(0))
             ocfg = AdamWConfig(lr=1e-2, moments_dtype="float32")
             opt = optim.init(params, ocfg)

@@ -1,4 +1,4 @@
-"""Kernel benches: block-shape sweep + generated-kernel scenarios.
+"""Kernel benches: block-shape sweep + generated-kernel + search scenarios.
 
 No TPU in this container, so wall-clock is the interpret-mode *correctness*
 path only; the reported ``derived`` column is the analytic HBM-traffic model
@@ -8,8 +8,14 @@ this is the §Perf lever for the kernel level.
 The ``gen.*`` rows go through ``repro.codegen``: the schedule-driven
 generator compiling plain / batched / chained / transposed contractions
 (none of which had kernels before the generator existed), checked against
-the hand-written baseline and jnp references.  ``--smoke`` (or
-``run(smoke=True)``) keeps shapes tiny for CI.
+the hand-written baseline and jnp references.  The ``search.*`` rows run
+the full ``repro.search`` pipeline (enumerate -> prune -> measure) and
+report how much of the variant space the analytic early-cut removed before
+measurement.  ``--smoke`` (or ``run(smoke=True)``) keeps shapes tiny for CI.
+
+Bench sections are individually guarded: a failing row emits
+``error=<type>:<msg>`` in its derived column instead of killing the run,
+and ``scripts/bench_smoke.py`` turns any such row into a non-zero exit.
 """
 
 import argparse
@@ -26,6 +32,21 @@ from repro.kernels.matmul.ref import matmul_ref
 from .common import emit, timeit
 
 
+def guarded(name):
+    """Run a bench section; an exception becomes an ``error=`` row."""
+
+    def deco(fn):
+        def wrapper(*a, **k):
+            try:
+                fn(*a, **k)
+            except Exception as e:  # noqa: BLE001 — bench must keep going
+                msg = str(e).replace(",", ";").replace("\n", " ")[:120]
+                emit(name, 0.0, f"error={type(e).__name__}:{msg}")
+        return wrapper
+
+    return deco
+
+
 def traffic(m, n, k, bm, bn, bk):
     return m * k * (n / bn) + k * n * (m / bm) + m * n
 
@@ -36,6 +57,44 @@ def _rnd(*shape, seed=0):
     )
 
 
+@guarded("search.matmul")
+def _bench_search(smoke: bool):
+    """The search pipeline end to end: candidates -> prune -> measure.
+
+    Reports (a) the winner's measured time with the space statistics and
+    (b) the winner vs the un-searched ``default_schedule`` — both timed in
+    the *same* measurement pass, and the default is always in the measured
+    set, so ``not_slower`` holds by construction (the ISSUE-2 acceptance
+    bar) rather than by luck of the clock.
+    """
+    from repro.search import einsum_reference, reference_arrays, search_schedule
+
+    s = 2 if smoke else 1
+    m = k = n = 128 // s
+    spec = matmul_spec(m, k, n)
+    arrays = reference_arrays(spec, seed=42)
+    res = search_schedule(
+        spec, beam_width=6, topk=3, interpret=True,
+        measure=True, arrays=arrays, plan_db=None,
+    )
+    st = res.stats
+    win = res.best
+    emit(
+        "search.matmul", win.measured_s,
+        f"max_err={win.max_err:.2e};candidates={st.considered};"
+        f"pruned={st.pruned_bound + st.pruned_beam};measured={st.measured}",
+    )
+    base = res.baseline()
+    if base is None or base.measured_s is None:
+        raise RuntimeError("default_schedule missing from measured set")
+    emit(
+        "search.vs_default", base.measured_s,
+        f"not_slower={win.measured_s <= base.measured_s};"
+        f"winner_s={win.measured_s:.3g};default_s={base.measured_s:.3g}",
+    )
+
+
+@guarded("kernel.gen")
 def _bench_generated(smoke: bool):
     """Generated kernels vs references, interpret mode (CPU container)."""
     from repro import codegen
@@ -138,6 +197,7 @@ def run(smoke: bool = False):
     emit("kernel.matmul.interpret_check", t, f"max_err={err:.2e}")
 
     _bench_generated(smoke)
+    _bench_search(smoke)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,24 @@
 #!/usr/bin/env python
-"""CI smoke bench: run kernel_bench --smoke through the generator path.
+"""CI smoke bench: run kernel_bench --smoke through the generator + search.
 
 Executes ``python -m benchmarks.kernel_bench --smoke`` with PYTHONPATH set,
-parses the CSV rows, and fails if any generated-kernel row is missing or
-reports max_err above tolerance.  Keeps the codegen path exercised on every
-push without a TPU.
+parses every CSV row, prints a one-line-per-row status table, and exits
+non-zero if ANY row failed:
+
+  * a required row is missing from the output,
+  * a row carries ``error=`` in its derived column (a bench section raised
+    — kernel_bench guards sections so one failure cannot hide another),
+  * a ``max_err`` is NaN or above tolerance (NaN previously compared False
+    against the threshold and slipped through — the exit-0-on-failure bug),
+  * the searched schedule measured slower than ``default_schedule``
+    (``search.vs_default`` must report ``not_slower=True``).
 
 Usage: python scripts/bench_smoke.py
 """
 
 from __future__ import annotations
 
+import math
 import os
 import re
 import subprocess
@@ -23,7 +31,28 @@ REQUIRED = [
     "kernel.gen.batched",
     "kernel.gen.chain",
     "kernel.gen.transposed",
+    "search.matmul",
+    "search.vs_default",
 ]
+
+
+def check_row(name: str, derived: str) -> str:
+    """'' if the row is healthy, else a failure reason."""
+    if "error=" in derived:
+        return derived[derived.index("error=") :]
+    m = re.search(r"max_err=([^;,\s]+)", derived)
+    if m:
+        try:
+            err = float(m.group(1))
+        except ValueError:
+            return f"unparseable max_err {m.group(1)!r}"
+        if math.isnan(err):
+            return "max_err is NaN"
+        if err > TOL:
+            return f"max_err {err:.3g} > {TOL}"
+    if name == "search.vs_default" and "not_slower=True" not in derived:
+        return "searched schedule slower than default_schedule"
+    return ""
 
 
 def main() -> int:
@@ -38,24 +67,35 @@ def main() -> int:
     )
     sys.stdout.write(proc.stdout)
     sys.stderr.write(proc.stderr)
-    if proc.returncode != 0:
-        print(f"FAIL: kernel_bench exited {proc.returncode}")
-        return 1
-    errs = {}
+
+    rows = {}
     for line in proc.stdout.splitlines():
-        m = re.match(r"([\w.]+),[^,]*,.*max_err=([\d.eE+-]+)", line)
-        if m:
-            errs[m.group(1)] = float(m.group(2))
-    bad = []
-    for name in REQUIRED:
-        if name not in errs:
-            bad.append(f"{name}: missing from bench output")
-        elif errs[name] > TOL:
-            bad.append(f"{name}: max_err {errs[name]:.3g} > {TOL}")
-    if bad:
-        print("FAIL:\n  " + "\n  ".join(bad))
+        m = re.match(r"([\w.]+),([^,]*),(.*)", line)
+        if m and m.group(1) != "name":
+            rows[m.group(1)] = m.group(3)
+
+    failures = []
+    print()
+    print(f"{'row':32s} {'status':6s} detail")
+    for name in sorted(set(rows) | set(REQUIRED)):
+        if name not in rows:
+            status, detail = "MISS", "required row absent from bench output"
+            failures.append(f"{name}: {detail}")
+        else:
+            reason = check_row(name, rows[name])
+            if reason:
+                status, detail = "FAIL", reason
+                failures.append(f"{name}: {reason}")
+            else:
+                status, detail = "ok", rows[name][:60]
+        print(f"{name:32s} {status:6s} {detail}")
+
+    if proc.returncode != 0:
+        failures.append(f"kernel_bench exited {proc.returncode}")
+    if failures:
+        print(f"\nFAIL ({len(failures)}):\n  " + "\n  ".join(failures))
         return 1
-    print(f"OK: {len(REQUIRED)} generated-kernel benches within {TOL}")
+    print(f"\nOK: {len(rows)} rows, {len(REQUIRED)} required, all healthy")
     return 0
 
 

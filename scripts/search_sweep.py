@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Offline variant-search sweep: rewrite rules -> ranked, measured plans.
+
+Runs the full ``repro.search`` pipeline for one or more spec/shape points,
+persists the ranked plans, and verifies the winner round-trips through the
+plan database (the same lookup ``ops.dense`` performs).
+
+Examples:
+  python scripts/search_sweep.py --spec matmul --shapes 512,512,512 \
+      --beam 8 --interpret
+  python scripts/search_sweep.py --spec chain_matmul \
+      --shapes 128,128,128,128 --beam 4 --interpret --dtype float32
+  python scripts/search_sweep.py --spec matmul \
+      --shapes "256,256,256;512,512,512" --no-measure   # analytic only
+
+Exit code is non-zero if any sweep point fails to produce a plan or the
+persisted winner does not round-trip.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_REPO, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def _fmt_sched(sched) -> str:
+    return " ".join(f"{l.index}:{l.tier}:{l.extent}" for l in sched.levels)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="cost-guided variant search sweep"
+    )
+    ap.add_argument(
+        "--spec", default="matmul",
+        help="spec family (matmul, matvec, weighted_matmul, "
+             "batched_matmul, chain_matmul, transposed_matmul)",
+    )
+    ap.add_argument(
+        "--shapes", required=True,
+        help="semicolon-separated extent tuples, e.g. '512,512,512'",
+    )
+    ap.add_argument("--beam", type=int, default=8, help="beam width")
+    ap.add_argument("--topk", type=int, default=4,
+                    help="survivors lowered + measured")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--interpret", action="store_true",
+                    help="measure via the Pallas interpreter (CPU)")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="analytic ranking only, skip lowering/timing")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--plan-db", default=None,
+                    help="plan DB path (default: $REPRO_PLAN_DB or "
+                         "~/.cache/repro/plans.json)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore previously stored plans for these keys")
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.search import (
+        PlanDB,
+        default_plan_db,
+        search_schedule,
+        spec_from_name,
+    )
+
+    db = PlanDB(args.plan_db) if args.plan_db else default_plan_db()
+    shapes = [
+        tuple(int(x) for x in part.split(","))
+        for part in args.shapes.split(";")
+        if part.strip()
+    ]
+    if not shapes:
+        ap.error("--shapes is empty")
+
+    failures = 0
+    for shape in shapes:
+        spec = spec_from_name(args.spec, shape)
+        print(f"== {args.spec} {'x'.join(map(str, shape))} "
+              f"(beam={args.beam}, topk={args.topk}, dtype={args.dtype}) ==")
+        res = search_schedule(
+            spec,
+            dtype=np.dtype(args.dtype),
+            beam_width=args.beam,
+            topk=args.topk,
+            measure=not args.no_measure,
+            interpret=args.interpret,
+            repeats=args.repeats,
+            plan_db=db,
+            use_cached_plan=not args.fresh,
+        )
+        s = res.stats
+        print(f"   candidates considered={s.considered} "
+              f"deduped={s.deduped} pruned(bound)={s.pruned_bound} "
+              f"pruned(beam)={s.pruned_beam} measured={s.measured}")
+        for rank, p in enumerate(res.ranked):
+            t = ("-" if p.measured_s is None
+                 else f"{p.measured_s * 1e3:8.2f}ms")
+            print(f"   #{rank} [{p.source:7s}] measured={t} "
+                  f"score={p.score:.3e} bound={p.lower_bound:.3e} "
+                  f"vmem_ok={p.fits_vmem}")
+            print(f"      {_fmt_sched(p.schedule)}")
+        if not res.ranked:
+            print("   FAIL: search produced no plan")
+            failures += 1
+            continue
+
+        # round-trip check: the lookup ops.dense performs must return the
+        # winner we just stored
+        from repro.codegen.cache import schedule_to_dict
+
+        stored = db.best_schedule(spec, np.dtype(args.dtype))
+        if stored is None or (
+            json.dumps(schedule_to_dict(stored), sort_keys=True)
+            != json.dumps(schedule_to_dict(res.best.schedule), sort_keys=True)
+        ):
+            print("   FAIL: winner did not round-trip through the plan DB")
+            failures += 1
+            continue
+        print(f"   plan persisted & round-tripped (db={db.path})")
+
+    if failures:
+        print(f"{failures} sweep point(s) failed")
+        return 1
+    print("sweep OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,12 @@ mesh (pod/data/model) -> grid -> seq -> mxu, which is what
 The three scenario builders at the bottom are the workloads the repo could
 not express before this subsystem existed: batched matmul, the A@B@C
 chain, and the transposed-operand GEMM.
+
+``default_schedule`` is the *un-searched* baseline: ``repro.search``
+explores loop orders and per-tier blockings around it
+(``search.space.candidate_schedule`` generalizes this builder to
+arbitrary loop orders) and only keeps a variant if it measures faster —
+``ops.dense`` asks the search's plan DB before falling back here.
 """
 
 from __future__ import annotations

@@ -14,6 +14,12 @@ the walk.  ``nest_to_expr`` emits the DSL expression for a variant, with the
 operand ``Subdiv``/``Flip`` prefix required by the exchange rules ("exchanging
 two nested higher order functions must be done with an appropriate flip in
 the subdivision structure").
+
+The consumer that closes the paper's loop is ``repro.search``: it feeds
+``variant_orders`` + per-tier subdivision choices through the analytic
+cost cut (``core.cost``), lowers the survivors via ``repro.codegen``, and
+measures them — see ``src/repro/search/__init__.py`` for the pipeline
+diagram.
 """
 
 from __future__ import annotations

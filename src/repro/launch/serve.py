@@ -37,7 +37,7 @@ class BatchServer:
     """Fixed-slot batch server (the slot count is the serving batch size)."""
 
     def __init__(self, cfg, *, batch_size: int, max_len: int,
-                 extra_batch=None, warm_gemms=()):
+                 extra_batch=None, warm_gemms=(), search_gemms=()):
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch_size = batch_size
@@ -54,6 +54,25 @@ class BatchServer:
             print(f"[serve] warmed {n} GEMM schedule(s) "
                   f"(cache {cache.path}: {cache.hits} hit, "
                   f"{cache.misses} miss)")
+        # The stronger warmup: run the full cost-guided search (enumerate
+        # -> prune -> measure) and persist the ranked plans; ops.dense
+        # prefers these over the analytic tuner from then on.  Hits the
+        # plan DB on repeat shapes, so restarts pay nothing.
+        if search_gemms:
+            from ..search import default_plan_db, search_gemm_plans
+
+            db = default_plan_db()
+            # bfloat16 to match warm_dense_cache: the plan key must equal
+            # the one ops.dense derives from the serving activations.
+            # On a TPU replica measure the real kernels; the interpreter
+            # only stands in for the clock where there is no TPU.
+            n = search_gemm_plans(
+                search_gemms,
+                dtype=jnp.bfloat16,
+                interpret=jax.default_backend() != "tpu",
+                plan_db=db,
+            )
+            print(f"[serve] searched {n} GEMM plan(s) -> {db.path}")
         self.params, _ = self.api.init(cfg, jax.random.key(0))
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, self.cfg, c, t)
@@ -112,6 +131,13 @@ def main():
         help="semicolon-separated M,K,N GEMM shapes to pre-tune "
              "through the codegen cache, e.g. '4096,4096,4096;128,4096,512'",
     )
+    ap.add_argument(
+        "--search-gemms", default="",
+        help="semicolon-separated M,K,N GEMM shapes to run the full "
+             "cost-guided variant search on (enumerate -> prune -> "
+             "measure) and persist as ranked plans; ops.dense then "
+             "serves the measured winner",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -128,23 +154,27 @@ def main():
         )
         for i in range(args.requests)
     ]
-    try:
-        warm = tuple(
-            tuple(int(x) for x in part.split(","))
-            for part in args.warm_gemms.split(";")
-            if part.strip()
-        )
-        if any(len(t) != 3 for t in warm):
-            raise ValueError(warm)
-    except ValueError:
-        ap.error(
-            f"--warm-gemms expects 'M,K,N[;M,K,N...]', got {args.warm_gemms!r}"
-        )
+    def _parse_shapes(flag: str, raw: str):
+        try:
+            shapes = tuple(
+                tuple(int(x) for x in part.split(","))
+                for part in raw.split(";")
+                if part.strip()
+            )
+            if any(len(t) != 3 for t in shapes):
+                raise ValueError(shapes)
+            return shapes
+        except ValueError:
+            ap.error(f"{flag} expects 'M,K,N[;M,K,N...]', got {raw!r}")
+
+    warm = _parse_shapes("--warm-gemms", args.warm_gemms)
+    search = _parse_shapes("--search-gemms", args.search_gemms)
     server = BatchServer(
         cfg,
         batch_size=args.requests,
         max_len=args.prompt_len + args.max_new + 1,
         warm_gemms=warm,
+        search_gemms=search,
     )
     stats = server.run(reqs)
     print(

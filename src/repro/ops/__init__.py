@@ -2,11 +2,13 @@
 
 ``dense`` is the single entry point every model matmul goes through.  On
 TPU backends (or with ``interpret=True``) 2-D contractions compile through
-``repro.codegen``: the Schedule comes from the persistent autotune cache
-(``codegen.tune_schedule``), so a serving replica reuses the fleet's tuned
-block shapes instead of re-tuning at import time.  On CPU and in the
-dry-run everything lowers to ``lax.dot_general`` so GSPMD can partition
-it.  This is where the paper's technique meets the model zoo.
+``repro.codegen``: the Schedule comes from the ranked plan database
+(``repro.search`` — measured winners of the cost-guided variant search)
+when a sweep has run for the shape, else from the persistent autotune
+cache (``codegen.tune_schedule``), so a serving replica reuses the fleet's
+searched/tuned block shapes instead of re-tuning at import time.  On CPU
+and in the dry-run everything lowers to ``lax.dot_general`` so GSPMD can
+partition it.  This is where the paper's technique meets the model zoo.
 
 New scenario entry points (all generated — the repo had no kernels for
 these before ``codegen`` existed):
@@ -33,13 +35,45 @@ def _use_pallas() -> bool:
 
 
 def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
-    """Generated kernel for ``spec`` with a cache-backed tuned schedule."""
+    """Generated kernel for ``spec``: searched plan first, tuned fallback.
+
+    The ranked plan database (``repro.search``) is consulted before the
+    analytic tuner: an offline ``scripts/search_sweep.py`` run or a
+    ``serve --search-gemms`` warmup leaves a measured-best schedule there,
+    and every later call for the same spec/shape/dtype picks it up.  With
+    no plan on record this degrades to PR-1 behaviour
+    (``codegen.tune_schedule`` + persistent autotune cache).
+    """
     from .. import codegen
 
-    schedule = codegen.tune_schedule(spec, dtype=np.dtype(dtype))
+    # PlanDB.best_schedule already degrades corrupt/stale entries to a
+    # miss; the catch here is for genuine breakage in the search package,
+    # which must not take down serving — but must not be silent either.
+    schedule = None
+    try:
+        from ..search import default_plan_db
+
+        schedule = default_plan_db().best_schedule(spec, np.dtype(dtype))
+    except Exception as e:
+        global _plan_db_warned
+        if not _plan_db_warned:
+            _plan_db_warned = True
+            import warnings
+
+            warnings.warn(
+                f"search plan DB unavailable ({type(e).__name__}: {e}); "
+                f"falling back to codegen.tune_schedule for all ops",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+    if schedule is None:
+        schedule = codegen.tune_schedule(spec, dtype=np.dtype(dtype))
     return codegen.cached_compile(
         spec, schedule, epilogue=epilogue, interpret=interpret
     )
+
+
+_plan_db_warned = False
 
 
 def warm_dense_cache(shapes, dtype=jnp.bfloat16) -> int:

@@ -1,0 +1,301 @@
+"""Cost-guided beam search over the candidate space — the analytic early-cut.
+
+The paper measures every enumerated variant and its Future Work asks for an
+analytic rule that cuts the space before measurement.  This module is that
+rule, structured as a beam search:
+
+  state     = (loop order, block choice for a prefix of the root indices)
+  extension = pick the next index's block/chunk from ``space.block_choices``
+  score     = pessimistic analytic step time (roofline max(compute, HBM
+              traffic) x alignment/VMEM penalties) with unassigned indices
+              defaulted to whole-extent blocks
+  bound     = the same roofline WITHOUT penalties — a true lower bound on
+              the score of every completion of the state, because leaving
+              an index whole minimizes trips for every operand
+
+Two prune mechanisms, kept separate because they have different guarantees:
+
+  * **bound cut** (sound): a state is dropped when its lower bound already
+    exceeds the best *complete* candidate's score — no completion can win.
+    Every such cut is recorded in ``SearchStats.bound_log`` and the
+    invariant (bound >= best-at-prune) is property-tested in
+    ``tests/test_search.py``.
+  * **beam trim** (heuristic): surviving states are ranked by score and only
+    the best ``beam_width`` continue.  This is the configurable-width knob;
+    with width >= |space| the search is exhaustive.
+
+States are deduplicated by ``Candidate.canonical_key`` — SJT neighbours that
+the exchange rules map to the same generated kernel collapse to one state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.cost import TPU
+from ..core.enumerate import ContractionSpec
+from .space import Candidate, block_choices, make_candidate
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Analytic roofline estimate for one candidate (seconds)."""
+
+    score: float          # pessimistic proxy for measurement: bound * penalty
+    lower_bound: float    # max(compute, HBM) — no penalties; score >= bound
+    compute_s: float
+    hbm_s: float
+    fits_vmem: bool
+    penalty: float
+    seq_steps: int        # tie-break: fewer fori_loop steps win
+
+
+def estimate(
+    spec: ContractionSpec,
+    order: Sequence[str],
+    blocks: Dict[str, int],
+    *,
+    elem_bytes: int = 4,
+    hw: dict = TPU,
+    assigned: Optional[frozenset] = None,
+) -> CostEstimate:
+    """Roofline cost of a (possibly partial) candidate.
+
+    ``blocks`` must cover every index (callers default unassigned indices to
+    their whole extent — the traffic-minimal choice, which is what makes
+    ``lower_bound`` sound for partial states).  ``assigned`` restricts the
+    alignment penalties to decided indices so a partial state is never
+    penalized for a choice it has not made yet.
+    """
+    spec = spec.root()
+    extents = spec.extents
+    n_blocks = {i: extents[i] // blocks[i] for i in spec.output}
+    vmem = 0
+    traffic = 0.0
+    for name, axes in spec.operands.items():
+        block_elems = 1
+        for a in axes:
+            # reduce axes are VMEM-resident at full extent in generated
+            # kernels (codegen.plan); only map blocking shrinks the block
+            block_elems *= blocks[a] if a in spec.output else extents[a]
+        vmem += block_elems
+        elems = math.prod(extents[a] for a in axes)
+        trips = math.prod(
+            n_blocks[i] for i in spec.output if i not in axes
+        )
+        traffic += elems * trips
+    out_block = math.prod(blocks[i] for i in spec.output)
+    vmem += 2 * out_block  # out tile + f32 accumulator scratch
+    traffic += math.prod(extents[i] for i in spec.output)
+
+    hbm_s = traffic * elem_bytes / hw["hbm_bw"]
+    compute_s = spec.flops() / hw["peak_flops"]
+    lower = max(hbm_s, compute_s)
+    fits = vmem * elem_bytes <= hw["vmem_bytes"]
+
+    decided = assigned if assigned is not None else frozenset(spec.indices)
+    penalty = 1.0
+    last = spec.output[-1]
+    if last in decided and blocks[last] % hw["mxu"][1] and blocks[last] != extents[last]:
+        penalty *= 1.25
+    if len(spec.output) >= 2:
+        sub = spec.output[-2]
+        if sub in decided and blocks[sub] % hw["sublane"] and blocks[sub] != extents[sub]:
+            penalty *= 1.1
+    # grid-dim order: the fastest-varying grid dim should be the output's
+    # contiguous axis so successive blocks write adjacent HBM lines
+    grid = [
+        i for i in order
+        if i in spec.output and i in decided and blocks[i] < extents[i]
+    ]
+    if grid and blocks.get(last, extents[last]) < extents[last] and grid[-1] != last:
+        penalty *= 1.05
+    if not fits and decided == frozenset(spec.indices):
+        penalty *= 8.0  # would spill on real hardware
+    seq_steps = sum(
+        extents[i] // blocks[i] for i in spec.indices if i not in spec.output
+    )
+    return CostEstimate(
+        score=lower * penalty,
+        lower_bound=lower,
+        compute_s=compute_s,
+        hbm_s=hbm_s,
+        fits_vmem=fits,
+        penalty=penalty,
+        seq_steps=seq_steps,
+    )
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """What the search did — surfaced in benches and the sweep CLI."""
+
+    considered: int = 0     # states scored (after dedup)
+    deduped: int = 0        # states collapsed by canonical_key
+    pruned_bound: int = 0   # sound roofline cuts
+    pruned_beam: int = 0    # heuristic width trims
+    measured: int = 0       # candidates actually lowered + timed
+    #: (canonical_key, lower_bound, best_complete_score_at_prune)
+    bound_log: List[Tuple[str, float, float]] = dataclasses.field(
+        default_factory=list
+    )
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "considered": self.considered,
+            "deduped": self.deduped,
+            "pruned_bound": self.pruned_bound,
+            "pruned_beam": self.pruned_beam,
+            "measured": self.measured,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoredCandidate:
+    candidate: Candidate
+    cost: CostEstimate
+
+    def sort_key(self):
+        c = self.cost
+        return (not c.fits_vmem, c.score, c.seq_steps, self.candidate.canonical_key())
+
+
+def _greedy_complete(
+    spec: ContractionSpec,
+    order: Tuple[str, ...],
+    choices: Dict[str, List[int]],
+    elem_bytes: int,
+    hw: dict,
+) -> ScoredCandidate:
+    """Cheapest single-path completion — seeds the bound cut with a real
+    complete candidate before the beam has finished any."""
+    blocks: Dict[str, int] = {}
+    defaults = {i: spec.extents[i] for i in spec.indices}
+    for index in spec.indices:
+        best_b, best_s = None, None
+        for b in choices[index]:
+            trial = {**defaults, **blocks, index: b}
+            est = estimate(
+                spec, order, trial, elem_bytes=elem_bytes, hw=hw,
+                assigned=frozenset(blocks) | {index},
+            )
+            key = (not est.fits_vmem, est.score, est.seq_steps, b)
+            if best_s is None or key < best_s:
+                best_b, best_s = b, key
+        blocks[index] = best_b
+    cand = make_candidate(spec, order, blocks)
+    return ScoredCandidate(
+        cand, estimate(spec, order, blocks, elem_bytes=elem_bytes, hw=hw)
+    )
+
+
+def beam_search(
+    spec: ContractionSpec,
+    *,
+    beam_width: int = 8,
+    topk: int = 4,
+    elem_bytes: int = 4,
+    hw: dict = TPU,
+    orders: Optional[Sequence[Sequence[str]]] = None,
+    choices: Optional[Dict[str, List[int]]] = None,
+    max_orders: int = 24,
+    bound_slack: float = 1.25,
+    stats: Optional[SearchStats] = None,
+) -> Tuple[List[ScoredCandidate], SearchStats]:
+    """Enumerate-and-cut: returns the analytic top-``topk`` candidates.
+
+    The survivors are ranked best-first by (fits-VMEM, score, seq steps);
+    measurement of the survivors is ``measure.measure_schedules``'s job.
+
+    ``bound_slack`` widens the sound cut: a state is dropped only when its
+    lower bound exceeds ``slack x`` the best complete score, so candidates
+    the analytic model ranks within ``slack`` of the proxy still reach
+    measurement — the model is a napkin, the clock is the judge.
+    """
+    spec = spec.root()
+    stats = stats if stats is not None else SearchStats()
+    if orders is None:
+        from .space import candidate_orders_counted
+
+        orders, visited = candidate_orders_counted(spec, max_orders)
+        stats.deduped += max(visited - len(orders), 0)
+    orders = [tuple(o) for o in orders]
+    choices = choices or block_choices(spec, hw)
+    defaults = {i: spec.extents[i] for i in spec.indices}
+
+    best_complete: Optional[ScoredCandidate] = None
+    for order in orders[: max(1, min(2, len(orders)))]:
+        g = _greedy_complete(spec, order, choices, elem_bytes, hw)
+        if best_complete is None or g.sort_key() < best_complete.sort_key():
+            best_complete = g
+
+    # state = (order, blocks-so-far); one decision stage per root index.
+    # States never need mid-stage dedup: initial orders have distinct
+    # map/reduce projections and blocks-so-far distinguish the rest; orders
+    # that converge (an index left whole) collapse at the final dedup below.
+    states: List[Tuple[Tuple[str, ...], Dict[str, int]]] = [
+        (o, {}) for o in orders
+    ]
+    decision_seq = spec.indices
+    final: List[ScoredCandidate] = []
+    for stage, index in enumerate(decision_seq):
+        extended: List[Tuple[ScoredCandidate, Tuple[str, ...], Dict[str, int]]] = []
+        complete_stage = stage == len(decision_seq) - 1
+        for order, blocks in states:
+            for b in choices[index]:
+                nb = {**blocks, index: b}
+                assigned = frozenset(nb)
+                cand = make_candidate(spec, order, {**defaults, **nb})
+                est = estimate(
+                    spec, order, {**defaults, **nb},
+                    elem_bytes=elem_bytes, hw=hw, assigned=assigned,
+                )
+                stats.considered += 1
+                sc = ScoredCandidate(cand, est)
+                if (
+                    best_complete is not None
+                    and not complete_stage
+                    and est.lower_bound >= best_complete.cost.score * bound_slack
+                ):
+                    # sound cut: no completion can beat the best proxy
+                    stats.pruned_bound += 1
+                    stats.bound_log.append(
+                        (cand.canonical_key(), est.lower_bound,
+                         best_complete.cost.score)
+                    )
+                    continue
+                if complete_stage and (
+                    best_complete is None
+                    or sc.sort_key() < best_complete.sort_key()
+                ):
+                    best_complete = sc
+                extended.append((sc, order, nb))
+        extended.sort(key=lambda t: t[0].sort_key())
+        if len(extended) > beam_width:
+            stats.pruned_beam += len(extended) - beam_width
+            extended = extended[:beam_width]
+        states = [(order, blocks) for _, order, blocks in extended]
+        if complete_stage:
+            final = [sc for sc, _, _ in extended]
+
+    if best_complete is not None:
+        # the greedy seed (or a completion the trim later dropped) is a real
+        # candidate — keep it in the ranking; dedup collapses repeats
+        final = list(final) + [best_complete]
+
+    ranked: List[ScoredCandidate] = sorted(final, key=lambda s: s.sort_key())
+    # dedup complete candidates by canonical key (orders can converge)
+    out: List[ScoredCandidate] = []
+    seen_keys = set()
+    for sc in ranked:
+        k = sc.candidate.canonical_key()
+        if k in seen_keys:
+            stats.deduped += 1
+            continue
+        seen_keys.add(k)
+        out.append(sc)
+        if len(out) >= topk:
+            break
+    return out, stats

@@ -1,0 +1,112 @@
+"""Measure surviving candidates through the kernel generator.
+
+The paper measures *every* variant; after the analytic cut only the beam's
+top-K reach this stage.  Each survivor is lowered with ``codegen.compile``
+(the same path ``ops.dense`` uses) and timed; ``interpret=True`` runs the
+Pallas interpreter so the loop closes on CPU-only machines — on a TPU the
+same call times the real kernel.
+
+Timing uses min-over-repeats after a warmup call (compilation is excluded),
+mirroring ``benchmarks.common.timeit``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.enumerate import ContractionSpec
+from ..core.schedule import Schedule
+
+
+@dataclasses.dataclass
+class Measurement:
+    schedule: Schedule
+    seconds: float
+    max_err: Optional[float]  # vs einsum reference; None when skipped
+
+
+def reference_arrays(
+    spec: ContractionSpec, dtype=np.float32, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """Standard-normal operand arrays in ``spec.operands`` order."""
+    rng = np.random.default_rng(seed)
+    spec = spec.root()
+    return {
+        name: rng.standard_normal(
+            tuple(spec.extents[i] for i in axes)
+        ).astype(dtype)
+        for name, axes in spec.operands.items()
+    }
+
+
+def einsum_reference(
+    spec: ContractionSpec, arrays: Dict[str, np.ndarray]
+) -> np.ndarray:
+    """np.einsum oracle for a root spec (f64 accumulation)."""
+    spec = spec.root()
+    letters = {i: chr(ord("a") + n) for n, i in enumerate(spec.indices)}
+    subs = ",".join(
+        "".join(letters[i] for i in axes) for axes in spec.operands.values()
+    )
+    out = "".join(letters[i] for i in spec.output)
+    return np.einsum(
+        f"{subs}->{out}",
+        *(np.asarray(arrays[n], np.float64) for n in spec.operands),
+    )
+
+
+def measure_schedules(
+    spec: ContractionSpec,
+    schedules: Sequence[Schedule],
+    *,
+    arrays: Optional[Dict[str, np.ndarray]] = None,
+    dtype=np.float32,
+    interpret: bool = True,
+    repeats: int = 2,
+    check: bool = True,
+    tol: Optional[float] = None,
+) -> List[Measurement]:
+    """Lower + time each schedule; same operand data for every candidate.
+
+    With ``check=True`` every measured kernel is verified against the
+    einsum oracle and a mismatch raises — a schedule that computes the
+    wrong answer must never win the search.  The default tolerance is
+    dtype-appropriate: 1e-3 relative for >= 32-bit floats, 5e-2 for
+    half-precision (bf16/f16 round the *stored* output even though the
+    generated kernels accumulate in f32).
+    """
+    import jax.numpy as jnp
+
+    from ..codegen import cached_compile
+
+    spec = spec.root()
+    if tol is None:
+        tol = 1e-3 if np.dtype(dtype).itemsize >= 4 else 5e-2
+    if arrays is None:
+        arrays = reference_arrays(spec, dtype=dtype)
+    jarrs = tuple(jnp.asarray(arrays[n]) for n in spec.operands)
+    ref = einsum_reference(spec, arrays) if check else None
+
+    out: List[Measurement] = []
+    for sched in schedules:
+        kern = cached_compile(spec, sched, interpret=interpret)
+        result = np.asarray(kern(*jarrs))  # warmup (compile + first run)
+        err = None
+        if check:
+            err = float(np.abs(result - ref).max() / max(np.abs(ref).max(), 1e-30))
+            if err > tol:
+                raise AssertionError(
+                    f"schedule {sched.levels} produced wrong output "
+                    f"(rel err {err:.3g} > {tol}) — refusing to rank it"
+                )
+        best = float("inf")
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            np.asarray(kern(*jarrs))
+            best = min(best, time.perf_counter() - t0)
+        out.append(Measurement(schedule=sched, seconds=best, max_err=err))
+    return out

@@ -1,0 +1,140 @@
+"""Ranked plan database — the search pipeline's persistent output.
+
+Where ``codegen.cache`` stores *one* tuned schedule per key, the plan DB
+stores the search's whole ranked ladder (schedule + analytic score + roofline
+bound + measured time + search stats), so ops can take the winner today and
+an operator can inspect or re-rank the runners-up tomorrow without
+re-searching.  Storage reuses ``codegen.cache.AutotuneCache`` (atomic JSON,
+concurrent-writer safe) in a *separate* file so search-format changes can
+never corrupt the PR-1 autotune cache:
+
+    $REPRO_PLAN_DB if set, else ~/.cache/repro/plans.json
+
+Keys come from ``codegen.cache.cache_key`` with a ``search.plan`` marker, so
+they are disjoint from autotune keys even if the files are merged by hand.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..codegen.cache import (
+    AutotuneCache,
+    cache_key,
+    schedule_from_dict,
+    schedule_to_dict,
+)
+from ..core.enumerate import ContractionSpec
+from ..core.schedule import Schedule
+
+#: bump when the ranked-entry layout changes
+PLAN_VERSION = 1
+
+
+def plan_key(
+    spec: ContractionSpec, dtype: Any, hardware: Optional[str] = None
+) -> str:
+    return cache_key(
+        spec,
+        dtype=np.dtype(dtype),
+        hardware=hardware,
+        extra={"what": "search.plan", "v": PLAN_VERSION},
+    )
+
+
+class PlanDB:
+    """Ranked schedules per (spec, dtype, hardware)."""
+
+    def __init__(self, path: str):
+        self._cache = AutotuneCache(path)
+
+    @property
+    def path(self) -> str:
+        return self._cache.path
+
+    def put(
+        self,
+        spec: ContractionSpec,
+        dtype: Any,
+        ranked: List[Dict[str, Any]],
+        stats: Optional[Dict[str, int]] = None,
+        hardware: Optional[str] = None,
+    ) -> str:
+        """Store ranked entries (best first). Each entry must carry a
+        ``schedule`` dict from ``schedule_to_dict``; score/measured_s/
+        lower_bound/source ride along verbatim."""
+        key = plan_key(spec, dtype, hardware)
+        self._cache.put(
+            key,
+            {
+                "v": PLAN_VERSION,
+                "ranked": ranked,
+                "stats": stats or {},
+            },
+        )
+        return key
+
+    def get(
+        self, spec: ContractionSpec, dtype: Any,
+        hardware: Optional[str] = None,
+    ) -> Optional[Dict[str, Any]]:
+        return self._cache.get(plan_key(spec, dtype, hardware))
+
+    def best_schedule(
+        self, spec: ContractionSpec, dtype: Any,
+        hardware: Optional[str] = None,
+    ) -> Optional[Schedule]:
+        """The stored winner, deserialized and validated — or None.
+
+        A corrupt or stale entry (e.g. an extent mismatch after a spec
+        change) degrades to a miss, never an error: callers fall back to
+        ``codegen.tune_schedule``.
+        """
+        entry = self.get(spec, dtype, hardware)
+        if not entry or not entry.get("ranked"):
+            return None
+        try:
+            return schedule_from_dict(
+                entry["ranked"][0]["schedule"], spec.root()
+            )
+        except Exception:
+            return None
+
+    def clear(self) -> None:
+        self._cache.clear()
+
+
+_default: Optional[PlanDB] = None
+
+
+def default_plan_db() -> PlanDB:
+    """Process-wide DB at $REPRO_PLAN_DB or ~/.cache/repro/plans.json."""
+    global _default
+    path = os.environ.get("REPRO_PLAN_DB") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "plans.json"
+    )
+    if _default is None or _default.path != path:
+        _default = PlanDB(path)
+    return _default
+
+
+def entry_from(
+    schedule: Schedule,
+    *,
+    score: float,
+    lower_bound: float,
+    fits_vmem: bool,
+    measured_s: Optional[float] = None,
+    source: str = "search",
+) -> Dict[str, Any]:
+    return {
+        "schedule": schedule_to_dict(schedule),
+        "score": float(score),
+        "lower_bound": float(lower_bound),
+        "fits_vmem": bool(fits_vmem),
+        "measured_s": None if measured_s is None else float(measured_s),
+        "source": source,
+    }

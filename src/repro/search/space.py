@@ -1,0 +1,224 @@
+"""Search space: candidate variants for a ContractionSpec.
+
+A *candidate* is a root-index loop order (one element of the rewrite-derived
+SJT walk, ``core.enumerate.variant_orders``) plus one block/chunk choice per
+root index — exactly the information a ``core.schedule.Schedule`` needs:
+
+  * a map index blocked at ``b < extent``    -> ``grid`` level + ``mxu`` leaf
+  * a map index left whole                   -> ``mxu`` level
+  * a reduce index chunked at ``b < extent`` -> ``seq`` level + ``mxu`` leaf
+  * a reduce index left whole                -> contracted in one dot
+
+Many SJT orders realize the *same* generated kernel: only the relative order
+of blocked map indices (the Pallas grid dims) and of chunked reduce indices
+(the in-kernel fori_loop nest) survives lowering.  ``canonical_key`` projects
+a candidate onto that quotient so the beam search deduplicates variants that
+the exchange rules prove equivalent (see ``core.rules`` eq 36-43).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.enumerate import ContractionSpec, variant_orders
+from ..core.schedule import Level, Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space, in root-index terms.
+
+    ``blocks`` maps every root index to its per-grid-step (map) or
+    per-seq-step (reduce) extent; an index mapped to its full extent has no
+    grid/seq level.  ``order`` is the loop nest outermost-first.
+    """
+
+    spec: ContractionSpec
+    order: Tuple[str, ...]
+    blocks: Tuple[Tuple[str, int], ...]  # sorted (index, block) pairs
+
+    @property
+    def block_dict(self) -> Dict[str, int]:
+        return dict(self.blocks)
+
+    def grid_order(self) -> Tuple[str, ...]:
+        b = self.block_dict
+        return tuple(
+            i for i in self.order
+            if i in self.spec.output and b.get(i, self.spec.extents[i]) < self.spec.extents[i]
+        )
+
+    def seq_order(self) -> Tuple[str, ...]:
+        b = self.block_dict
+        return tuple(
+            i for i in self.order
+            if i not in self.spec.output
+            and b.get(i, self.spec.extents[i]) < self.spec.extents[i]
+        )
+
+    def canonical_key(self) -> str:
+        """Identity after lowering: grid order, seq order, block sizes."""
+        return json.dumps(
+            {
+                "grid": list(self.grid_order()),
+                "seq": list(self.seq_order()),
+                "blocks": sorted(
+                    (i, int(b)) for i, b in self.blocks
+                ),
+            },
+            sort_keys=True,
+            separators=(",", ":"),
+        )
+
+    def to_schedule(self) -> Schedule:
+        return candidate_schedule(self.spec, self.order, self.block_dict)
+
+
+def make_candidate(
+    spec: ContractionSpec, order: Sequence[str], blocks: Dict[str, int]
+) -> Candidate:
+    spec = spec.root()
+    full = {i: int(blocks.get(i, spec.extents[i])) for i in spec.indices}
+    return Candidate(
+        spec=spec,
+        order=tuple(order),
+        blocks=tuple(sorted(full.items())),
+    )
+
+
+def candidate_schedule(
+    spec: ContractionSpec, order: Sequence[str], blocks: Dict[str, int]
+) -> Schedule:
+    """Build the Schedule a candidate denotes.
+
+    Same leaf structure as ``codegen.schedules.default_schedule`` but the
+    grid and seq levels are emitted in loop-``order`` (default_schedule
+    always uses ``spec.indices`` order), so the search can rank grid-dim
+    and reduction-nest orders, not just block shapes.
+    """
+    spec = spec.root()
+    order = tuple(order)
+    if set(order) != set(spec.indices):
+        raise ValueError(f"order {order} != indices {spec.indices}")
+    s = spec
+    grid: List[Level] = []
+    seq: List[Level] = []
+    mxu: List[Level] = []
+    for index in order:
+        extent = spec.extents[index]
+        b = int(blocks.get(index, extent))
+        if not 1 <= b <= extent or extent % b:
+            raise ValueError(
+                f"block {b} does not divide extent {extent} of {index}"
+            )
+        if b == extent:
+            mxu.append(Level(index, "mxu", extent))
+            continue
+        s = s.subdivide(index, b)
+        outer = Level(
+            index + "o",
+            "grid" if index in spec.output else "seq",
+            extent // b,
+        )
+        (grid if index in spec.output else seq).append(outer)
+        mxu.append(Level(index + "i", "mxu", b))
+    return Schedule(s, tuple(grid + seq + mxu)).validate()
+
+
+# ---------------------------------------------------------------------------
+# choice generators
+# ---------------------------------------------------------------------------
+
+
+def map_block_choices(
+    extent: int, hw: dict, per_index: int = 6
+) -> List[int]:
+    """Pow2 divisor blocks for a map (output) index, largest first.
+
+    Tiny batch-like extents offer {1, extent} so a batched dim can become
+    one grid step per element (the ``default_schedule`` convention).
+    """
+    if extent <= hw["sublane"]:
+        return [extent, 1] if extent > 1 else [1]
+    out = [extent]
+    c = 1
+    while c <= min(extent, 1024):
+        if extent % c == 0 and c != extent:
+            out.append(c)
+        c *= 2
+    out.sort(reverse=True)
+    return out[:per_index]
+
+
+def seq_chunk_choices(extent: int, hw: dict, cap: int = 512) -> List[int]:
+    """Chunk choices for a reduce index: whole axis, or pow2 chunks <= cap.
+
+    Reduce chunking never changes HBM traffic in the generated kernels (the
+    axis is VMEM-resident either way, see ``codegen.plan``), it only bounds
+    the per-dot depth — so the fan-out here is deliberately small.
+    """
+    out = [extent]
+    if extent > cap:
+        best = 0
+        c = 1
+        while c <= cap:
+            if extent % c == 0:
+                best = c
+            c *= 2
+        if best:
+            out.append(best)
+    elif extent > hw["mxu"][0] and extent % 2 == 0:
+        out.append(extent // 2)
+    return out
+
+
+def block_choices(
+    spec: ContractionSpec, hw: dict, per_index: int = 6
+) -> Dict[str, List[int]]:
+    spec = spec.root()
+    return {
+        i: (
+            map_block_choices(spec.extents[i], hw, per_index)
+            if i in spec.output
+            else seq_chunk_choices(spec.extents[i], hw)
+        )
+        for i in spec.indices
+    }
+
+
+def candidate_orders(
+    spec: ContractionSpec, limit: Optional[int] = None
+) -> List[Tuple[str, ...]]:
+    """Root loop orders from the SJT walk, deduplicated by lowering identity.
+
+    Uses ``variant_orders`` (every order reachable by the exchange rules),
+    then collapses orders whose map-index and reduce-index projections
+    agree — those differ only by map/rnz exchanges that the generated
+    kernel realizes identically.
+    """
+    return candidate_orders_counted(spec, limit)[0]
+
+
+def candidate_orders_counted(
+    spec: ContractionSpec, limit: Optional[int] = None
+) -> Tuple[List[Tuple[str, ...]], int]:
+    """(orders, visited) — one walk; ``visited - len(orders)`` = deduped."""
+    spec = spec.root()
+    seen = set()
+    out: List[Tuple[str, ...]] = []
+    visited = 0
+    for order in variant_orders(spec, dedup_rnz=False):
+        visited += 1
+        key = (
+            tuple(i for i in order if i in spec.output),
+            tuple(i for i in order if i not in spec.output),
+        )
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(order)
+        if limit is not None and len(out) >= limit:
+            break
+    return out, visited

@@ -1,0 +1,132 @@
+"""Golden regression: PR-1 autotune-cache entries must keep hitting.
+
+``tests/data/autotune_cache_golden.json`` is a committed snapshot of the
+cache file ``codegen.tune_schedule`` writes (CACHE_VERSION 1 /
+TUNER_VERSION 2 format, hardware fingerprint pinned to
+``golden/fixture-hw``).  These tests guard ``$REPRO_AUTOTUNE_CACHE``
+compatibility across releases:
+
+  * the key-derivation function still produces the committed hex digests
+    for the same (spec, dtype, tuner, hw) inputs — if this fails, every
+    fleet cache goes cold on upgrade; bump ``CACHE_VERSION`` deliberately
+    instead of silently changing the hash inputs;
+  * the serialized schedules still deserialize, validate, and round-trip
+    byte-identically;
+  * ``tune_schedule`` against the fixture *hits* (no re-enumeration) and
+    returns exactly the stored winner.
+
+Regenerate (only after a deliberate format bump) by deleting the fixture
+and re-running the snippet in this file's git history / CHANGES.md — pin
+``hardware_fingerprint`` to ``golden/fixture-hw`` first.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import repro.codegen.cache as cache_mod
+from repro.codegen.cache import (
+    AutotuneCache,
+    cache_key,
+    schedule_from_dict,
+    schedule_to_dict,
+)
+from repro.codegen.tune import TUNER_VERSION, tune_schedule
+from repro.core.cost import TPU
+from repro.core.enumerate import chain_matmul_spec, matmul_spec
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "autotune_cache_golden.json")
+GOLDEN_HW = "golden/fixture-hw"
+
+#: (spec ctor args are part of the key) — what the fixture was built from
+FIXTURE_POINTS = [
+    ("matmul", matmul_spec(2048, 4096, 4096), np.dtype(np.float32)),
+    ("matmul-bf16", matmul_spec(2048, 4096, 4096), np.dtype("bfloat16")),
+    ("chain", chain_matmul_spec(1024, 2048, 2048, 1024), np.dtype(np.float32)),
+]
+
+
+def _golden_key(spec, dtype):
+    """The exact key construction tune_schedule used at fixture time."""
+    return cache_key(
+        spec,
+        dtype=dtype,
+        hardware=GOLDEN_HW,
+        extra={
+            "tuner": TUNER_VERSION,
+            "keep": 3,
+            "hw": sorted(
+                (k, v) for k, v in TPU.items()
+                if isinstance(v, (int, float))
+            ),
+            "measured": False,
+        },
+    )
+
+
+@pytest.fixture()
+def fixture_data():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_fixture_exists_and_is_wellformed(fixture_data):
+    assert len(fixture_data) == len(FIXTURE_POINTS)
+    for entry in fixture_data.values():
+        assert set(entry) >= {"schedule", "blocks", "measured"}
+        assert set(entry["schedule"]) == {"splits", "levels"}
+
+
+@pytest.mark.parametrize(
+    "label,spec,dtype",
+    FIXTURE_POINTS,
+    ids=[p[0] for p in FIXTURE_POINTS],
+)
+def test_key_derivation_is_stable(fixture_data, label, spec, dtype):
+    key = _golden_key(spec, dtype)
+    assert key in fixture_data, (
+        f"cache key for {label} drifted — PR-1 fleet caches would go cold. "
+        f"If the format change is deliberate, bump CACHE_VERSION and "
+        f"regenerate the fixture."
+    )
+
+
+@pytest.mark.parametrize(
+    "label,spec,dtype",
+    FIXTURE_POINTS,
+    ids=[p[0] for p in FIXTURE_POINTS],
+)
+def test_schedule_roundtrip(fixture_data, label, spec, dtype):
+    entry = fixture_data[_golden_key(spec, dtype)]
+    sched = schedule_from_dict(entry["schedule"], spec)
+    assert schedule_to_dict(sched) == entry["schedule"]
+    # the stored splits/levels must still validate against today's Schedule
+    sched.validate()
+
+
+def test_tune_schedule_hits_golden_cache(tmp_path, monkeypatch):
+    """End to end: a fleet cache file from PR 1 still short-circuits the
+    tuner after the search-pipeline changes."""
+    monkeypatch.setattr(
+        cache_mod, "hardware_fingerprint", lambda: GOLDEN_HW
+    )
+    path = tmp_path / "autotune.json"
+    shutil.copy(FIXTURE, path)
+    cache = AutotuneCache(str(path))
+
+    for label, spec, dtype in FIXTURE_POINTS:
+        before_hits = cache.hits
+        sched = tune_schedule(
+            spec, dtype=dtype, cache=cache, use_default_cache=False
+        )
+        assert cache.hits == before_hits + 1, f"{label}: cache missed"
+        with open(FIXTURE) as f:
+            entry = json.load(f)[_golden_key(spec, dtype)]
+        assert schedule_to_dict(sched) == entry["schedule"], label
+    assert cache.misses == 0

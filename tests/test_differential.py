@@ -1,0 +1,132 @@
+"""Differential fuzz suite: random spec x random legal schedule, three ways.
+
+For every case the generated Pallas kernel (interpret mode) must agree with
+
+  * ``np.einsum`` over the root contraction (f64 accumulation oracle), and
+  * the HoF reference interpreter (``core.interp`` via ``evaluate_variant``)
+
+to dtype-appropriate tolerance.  Cases are drawn from an explicit PRNG seed
+matrix — no hypothesis dependency, and any failure reproduces from its
+(family, seed) parametrization id alone.
+
+The matrix is 6 spec families x 10 seeds = 60 float32 cases (the CI bar is
+>= 50), plus one bfloat16 case per family exercising the low-precision
+store path with f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro import codegen  # noqa: E402
+from repro.core.enumerate import (  # noqa: E402
+    batched_matmul_spec,
+    chain_matmul_spec,
+    evaluate_variant,
+    matmul_spec,
+    matvec_spec,
+    transposed_matmul_spec,
+    weighted_matmul_spec,
+)
+from repro.search import (  # noqa: E402
+    candidate_schedule,
+    einsum_reference,
+    reference_arrays,
+)
+
+#: family -> (ctor, arity, seed offset).  Offsets keep streams disjoint and
+#: stable — never derive them from hash() (PYTHONHASHSEED would break repro).
+FAMILIES = {
+    "matmul": (matmul_spec, 3, 1000),
+    "matvec": (matvec_spec, 2, 2000),
+    "weighted_matmul": (weighted_matmul_spec, 3, 3000),
+    "batched_matmul": (batched_matmul_spec, 4, 4000),
+    "transposed_matmul": (transposed_matmul_spec, 3, 5000),
+    "chain_matmul": (chain_matmul_spec, 4, 6000),
+}
+
+EXTENT_POOL = (2, 3, 4, 6, 8)
+SEEDS = tuple(range(10))
+CASES = [(fam, seed) for fam in sorted(FAMILIES) for seed in SEEDS]
+assert len(CASES) >= 50, "CI requires at least 50 differential cases"
+
+TOL = {  # dtype -> (rtol, atol) against the f64 einsum oracle
+    np.dtype(np.float32): (1e-4, 1e-4),
+    np.dtype(jnp.bfloat16): (6e-2, 6e-2),
+}
+
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def _draw_case(family: str, seed: int):
+    """(spec, loop order, blocks) — everything from one seeded stream."""
+    ctor, arity, offset = FAMILIES[family]
+    rng = np.random.default_rng(offset + seed)
+    extents = [int(rng.choice(EXTENT_POOL)) for _ in range(arity)]
+    spec = ctor(*extents)
+    order = list(spec.indices)
+    rng.shuffle(order)
+    blocks = {
+        i: int(rng.choice(_divisors(spec.extents[i])))
+        for i in spec.indices
+    }
+    return spec, tuple(order), blocks
+
+
+def _run_kernel(spec, schedule, arrays, dtype):
+    kern = codegen.compile(spec, schedule, interpret=True)
+    args = tuple(
+        jnp.asarray(arrays[n], dtype) for n in spec.operands
+    )
+    return np.asarray(kern(*args), np.float64)
+
+
+@pytest.mark.parametrize("family,seed", CASES)
+def test_generated_kernel_matches_oracles(family, seed):
+    spec, order, blocks = _draw_case(family, seed)
+    schedule = candidate_schedule(spec, order, blocks)
+    arrays = reference_arrays(spec, dtype=np.float32, seed=seed)
+    ref = einsum_reference(spec, arrays)
+    rtol, atol = TOL[np.dtype(np.float32)]
+
+    out = _run_kernel(spec, schedule, arrays, jnp.float32)
+    np.testing.assert_allclose(
+        out, ref, rtol=rtol, atol=atol,
+        err_msg=f"kernel != einsum for {family} seed={seed} "
+                f"order={order} blocks={blocks}",
+    )
+
+    interp = evaluate_variant(spec, spec.indices, arrays)
+    np.testing.assert_allclose(
+        np.asarray(interp, np.float64), ref, rtol=rtol, atol=atol,
+        err_msg=f"reference interpreter != einsum for {family} seed={seed}",
+    )
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_generated_kernel_bfloat16(family):
+    """Low-precision store path: bf16 in/out, f32 accumulation inside."""
+    spec, order, blocks = _draw_case(family, seed=7)
+    schedule = candidate_schedule(spec, order, blocks)
+    arrays = reference_arrays(spec, dtype=np.float32, seed=7)
+    ref = einsum_reference(spec, arrays)
+    # quantize the inputs to bf16 before building the oracle so rounding
+    # of the *inputs* is not charged against the kernel
+    q = {
+        n: np.asarray(jnp.asarray(a, jnp.bfloat16), np.float64)
+        for n, a in arrays.items()
+    }
+    ref = einsum_reference(spec, q)
+    rtol, atol = TOL[np.dtype(jnp.bfloat16)]
+    out = _run_kernel(spec, schedule, arrays, jnp.bfloat16)
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(
+        out / scale, ref / scale, rtol=rtol, atol=atol,
+        err_msg=f"bf16 kernel mismatch for {family}",
+    )

@@ -11,7 +11,14 @@ generator compiling plain / batched / chained / transposed contractions
 the hand-written baseline and jnp references.  The ``search.*`` rows run
 the full ``repro.search`` pipeline (enumerate -> prune -> measure) and
 report how much of the variant space the analytic early-cut removed before
-measurement.  ``--smoke`` (or ``run(smoke=True)``) keeps shapes tiny for CI.
+measurement.  The ``grad.*`` rows exercise the training half
+(``repro.grad``): forward + backward through the custom_vjp ops, the
+epilogue-aware dense_act backward, and the backward GEMMs picking up
+searched plans under their derived-spec keys.  ``--smoke`` (or
+``run(smoke=True)``) keeps shapes tiny for CI.
+
+Rows that do arithmetic carry ``flops=`` in the derived column so
+``scripts/bench_smoke.py`` can report GFLOP/s in ``BENCH_pr3.json``.
 
 Bench sections are individually guarded: a failing row emits
 ``error=<type>:<msg>`` in its derived column instead of killing the run,
@@ -19,6 +26,8 @@ and ``scripts/bench_smoke.py`` turns any such row into a non-zero exit.
 """
 
 import argparse
+import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -108,7 +117,7 @@ def _bench_generated(smoke: bool):
     kern = codegen.compile(spec, sched, interpret=True)
     t = timeit(lambda: np.asarray(kern(a, b)), repeats=1)
     err = np.abs(np.asarray(kern(a, b)) - np.asarray(matmul_ref(a, b))).max()
-    emit("kernel.gen.matmul", t, f"max_err={err:.2e}")
+    emit("kernel.gen.matmul", t, f"max_err={err:.2e};flops={2*m*k*n}")
 
     base = np.abs(
         np.asarray(
@@ -130,7 +139,8 @@ def _bench_generated(smoke: bool):
         np.asarray(kb(ab, bb))
         - np.einsum("bij,bjk->bik", np.asarray(ab), np.asarray(bb))
     ).max()
-    emit("kernel.gen.batched", t, f"max_err={err:.2e}")
+    emit("kernel.gen.batched", t,
+         f"max_err={err:.2e};flops={2*bsz*(m//2)*(k//2)*(n//2)}")
 
     sc = codegen.chain_matmul_schedule(
         m // 2, k // 2, k // 2, n // 2,
@@ -144,7 +154,8 @@ def _bench_generated(smoke: bool):
         np.asarray(kc(ac, bc, cc))
         - np.einsum("ij,jk,kl->il", *(np.asarray(x) for x in (ac, bc, cc)))
     ).max()
-    emit("kernel.gen.chain", t, f"max_err={err:.2e}")
+    chain_flops = 2 * (m // 2) * (k // 2) * (k // 2 + n // 2)
+    emit("kernel.gen.chain", t, f"max_err={err:.2e};flops={chain_flops}")
 
     st = codegen.transposed_matmul_schedule(
         m // 2, k // 2, n // 2, block_m=16, block_n=16, block_k=16
@@ -157,7 +168,147 @@ def _bench_generated(smoke: bool):
         np.asarray(kt(at, bt))
         - np.einsum("ji,jk->ik", np.asarray(at), np.asarray(bt))
     ).max()
-    emit("kernel.gen.transposed", t, f"max_err={err:.2e}")
+    emit("kernel.gen.transposed", t,
+         f"max_err={err:.2e};flops={2*(m//2)*(k//2)*(n//2)}")
+
+
+@guarded("grad.dense")
+def _bench_grad_dense(smoke: bool):
+    """Training fwd+bwd through ops.dense's custom_vjp (repro.grad).
+
+    The backward GEMMs are the derived ``matmul.dA``/``matmul.dB`` specs
+    compiled through the same generated-kernel pipeline as the forward —
+    128-aligned extents so dense's kernel dispatch fires in interpret mode.
+    """
+    import jax
+
+    from repro import ops
+
+    m = k = n = 128
+    x, w = _rnd(m, k, seed=20), _rnd(k, n, seed=21)
+    flops = 2 * m * k * n
+
+    t_f = timeit(lambda: np.asarray(ops.dense(x, w, interpret=True)),
+                 repeats=1)
+    err_f = np.abs(
+        np.asarray(ops.dense(x, w, interpret=True))
+        - np.asarray(matmul_ref(x, w))
+    ).max()
+    emit("grad.dense.fwd", t_f, f"max_err={err_f:.2e};flops={flops}")
+
+    grad_fn = jax.grad(
+        lambda x_, w_: jnp.sum(ops.dense(x_, w_, interpret=True)),
+        argnums=(0, 1),
+    )
+    t_b = timeit(
+        lambda: [np.asarray(v) for v in grad_fn(x, w)], repeats=1
+    )
+    gx, gw = grad_fn(x, w)
+    ones = np.ones((m, n), np.float32)
+    err_b = max(
+        np.abs(np.asarray(gx) - ones @ np.asarray(w).T).max(),
+        np.abs(np.asarray(gw) - np.asarray(x).T @ ones).max(),
+    )
+    # grad_fn runs fwd + dA + dB: three GEMMs' worth of work
+    emit("grad.dense.bwd", t_b, f"max_err={err_b:.2e};flops={3*flops}")
+
+
+@guarded("grad.dense_act")
+def _bench_grad_dense_act(smoke: bool):
+    """Epilogue backward: recompute-acc GEMM + elementwise VJP + dA/dB."""
+    import jax
+
+    from repro import ops
+    from repro.kernels.fused_dense_act.ref import fused_dense_act_ref
+
+    m = d = f = 32 if smoke else 64
+    x, w = _rnd(m, d, seed=22), _rnd(d, f, seed=23)
+    beta, mean = _rnd(f, seed=24), _rnd(f, seed=25) * 0.1
+    var = jnp.abs(_rnd(f, seed=26)) + 0.5
+
+    grad_fn = jax.grad(
+        lambda *a: jnp.sum(ops.dense_act(*a, interpret=True)),
+        argnums=(0, 1, 2),
+    )
+    ref_fn = jax.grad(
+        lambda *a: jnp.sum(fused_dense_act_ref(*a)), argnums=(0, 1, 2)
+    )
+    t = timeit(
+        lambda: [np.asarray(v) for v in grad_fn(x, w, beta, mean, var)],
+        repeats=1,
+    )
+    err = max(
+        np.abs(np.asarray(a) - np.asarray(b)).max()
+        for a, b in zip(grad_fn(x, w, beta, mean, var),
+                        ref_fn(x, w, beta, mean, var))
+    )
+    # 4 GEMMs: primal fwd + accumulator recompute + dA + dB
+    emit("grad.dense_act.bwd", t, f"max_err={err:.2e};flops={4*2*m*d*f}")
+
+
+@guarded("grad.plandb")
+def _bench_grad_plandb(smoke: bool):
+    """Backward GEMMs picking up *searched* plans by derived-spec key.
+
+    Sweeps fwd+dA+dB into a private plan DB (search_schedule_with_grads),
+    then runs jax.grad through ops.dense and reports how many plan-DB
+    lookups the tape hit — the ISSUE-3 acceptance bar, as a bench row.
+    """
+    import tempfile
+
+    import jax
+
+    from repro import ops
+    from repro.grad import derived_specs
+    from repro.search import default_plan_db, search_schedule_with_grads
+
+    m = k = n = 128
+    tmp = tempfile.mkdtemp(prefix="repro-grad-bench-")
+    saved = {
+        v: os.environ.get(v)
+        for v in ("REPRO_PLAN_DB", "REPRO_AUTOTUNE_CACHE")
+    }
+    os.environ["REPRO_PLAN_DB"] = os.path.join(tmp, "plans.json")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(tmp, "autotune.json")
+    try:
+        spec = matmul_spec(m, k, n)
+        db = default_plan_db()
+        t0 = time.perf_counter()
+        res = search_schedule_with_grads(
+            spec, dtype=np.float32, beam_width=4, topk=2,
+            interpret=True, repeats=1, plan_db=db,
+        )
+        sweep_s = time.perf_counter() - t0
+        keys_ok = all(
+            db.best_schedule(s, np.float32) is not None
+            for s in (spec, *derived_specs(spec).values())
+        )
+        hits0 = db.lookup_hits
+        x, w = _rnd(m, k, seed=27), _rnd(k, n, seed=28)
+        gx, gw = jax.grad(
+            lambda a, b: jnp.sum(ops.dense(a, b, interpret=True)),
+            argnums=(0, 1),
+        )(x, w)
+        hits = db.lookup_hits - hits0
+        ones = np.ones((m, n), np.float32)
+        err = max(
+            np.abs(np.asarray(gx) - ones @ np.asarray(w).T).max(),
+            np.abs(np.asarray(gw) - np.asarray(x).T @ ones).max(),
+        )
+        ok = keys_ok and hits >= 3 and err < 1e-3
+        emit(
+            "grad.plandb", sweep_s,
+            f"ok={ok};plans={len(res)};db_hits={hits};max_err={err:.2e}",
+        )
+    finally:
+        for v, val in saved.items():
+            if val is None:
+                os.environ.pop(v, None)
+            else:
+                os.environ[v] = val
+        import shutil
+
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def run(smoke: bool = False):
@@ -198,6 +349,9 @@ def run(smoke: bool = False):
 
     _bench_generated(smoke)
     _bench_search(smoke)
+    _bench_grad_dense(smoke)
+    _bench_grad_dense_act(smoke)
+    _bench_grad_plandb(smoke)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""CI smoke bench: run kernel_bench --smoke through the generator + search.
+"""CI smoke bench: run kernel_bench --smoke through generator+search+grad.
 
 Executes ``python -m benchmarks.kernel_bench --smoke`` with PYTHONPATH set,
 parses every CSV row, prints a one-line-per-row status table, and exits
@@ -11,13 +11,21 @@ non-zero if ANY row failed:
   * a ``max_err`` is NaN or above tolerance (NaN previously compared False
     against the threshold and slipped through — the exit-0-on-failure bug),
   * the searched schedule measured slower than ``default_schedule``
-    (``search.vs_default`` must report ``not_slower=True``).
+    (``search.vs_default`` must report ``not_slower=True``),
+  * the backward GEMMs failed to pick up searched plans by derived-spec
+    key (``grad.plandb`` must report ``ok=True``).
+
+On success (and only then) the parsed rows are written to
+``BENCH_pr3.json`` at the repo root — per-row seconds, GFLOP/s (from the
+``flops=`` fields kernel_bench emits) and max_err — the machine-readable
+perf trajectory later PRs diff against.
 
 Usage: python scripts/bench_smoke.py
 """
 
 from __future__ import annotations
 
+import json
 import math
 import os
 import re
@@ -25,6 +33,7 @@ import subprocess
 import sys
 
 TOL = 1e-3
+BENCH_JSON = "BENCH_pr3.json"
 REQUIRED = [
     "kernel.gen.matmul",
     "kernel.gen.vs_handwritten",
@@ -33,6 +42,10 @@ REQUIRED = [
     "kernel.gen.transposed",
     "search.matmul",
     "search.vs_default",
+    "grad.dense.fwd",
+    "grad.dense.bwd",
+    "grad.dense_act.bwd",
+    "grad.plandb",
 ]
 
 
@@ -52,7 +65,56 @@ def check_row(name: str, derived: str) -> str:
             return f"max_err {err:.3g} > {TOL}"
     if name == "search.vs_default" and "not_slower=True" not in derived:
         return "searched schedule slower than default_schedule"
+    if name == "grad.plandb" and "ok=True" not in derived:
+        return "backward GEMMs did not hit searched plans by derived key"
     return ""
+
+
+def _field(derived: str, key: str):
+    m = re.search(rf"{key}=([^;,\s]+)", derived)
+    if not m:
+        return None
+    try:
+        val = float(m.group(1))
+    except ValueError:
+        return None
+    # non-finite values must not reach the JSON baseline (bare NaN is not
+    # valid strict JSON and would poison later-PR diffs)
+    return val if math.isfinite(val) else None
+
+
+def write_bench_json(repo: str, rows: dict) -> str:
+    """Persist the parsed rows as the PR's perf baseline (BENCH_pr3.json).
+
+    ``rows`` maps name -> (seconds, derived).  GFLOP/s comes from the
+    ``flops=`` field where a row carries one; rows without arithmetic
+    (plan-DB bookkeeping, vs_* comparisons) report null.
+    """
+    out = {}
+    for name in sorted(rows):
+        seconds, derived = rows[name]
+        flops = _field(derived, "flops")
+        gflops = (
+            flops / seconds / 1e9
+            if flops and seconds and seconds > 0 else None
+        )
+        out[name] = {
+            "seconds": seconds if math.isfinite(seconds) else None,
+            "gflops": None if gflops is None else round(gflops, 4),
+            "max_err": _field(derived, "max_err"),
+        }
+    path = os.path.join(repo, BENCH_JSON)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "schema": 1,
+                "source": "scripts/bench_smoke.py (kernel_bench --smoke)",
+                "rows": out,
+            },
+            f, indent=1, sort_keys=True, allow_nan=False,
+        )
+        f.write("\n")
+    return path
 
 
 def main() -> int:
@@ -72,7 +134,11 @@ def main() -> int:
     for line in proc.stdout.splitlines():
         m = re.match(r"([\w.]+),([^,]*),(.*)", line)
         if m and m.group(1) != "name":
-            rows[m.group(1)] = m.group(3)
+            try:
+                seconds = float(m.group(2)) * 1e-6  # column is us_per_call
+            except ValueError:
+                seconds = 0.0
+            rows[m.group(1)] = (seconds, m.group(3))
 
     failures = []
     print()
@@ -82,12 +148,12 @@ def main() -> int:
             status, detail = "MISS", "required row absent from bench output"
             failures.append(f"{name}: {detail}")
         else:
-            reason = check_row(name, rows[name])
+            reason = check_row(name, rows[name][1])
             if reason:
                 status, detail = "FAIL", reason
                 failures.append(f"{name}: {reason}")
             else:
-                status, detail = "ok", rows[name][:60]
+                status, detail = "ok", rows[name][1][:60]
         print(f"{name:32s} {status:6s} {detail}")
 
     if proc.returncode != 0:
@@ -95,7 +161,9 @@ def main() -> int:
     if failures:
         print(f"\nFAIL ({len(failures)}):\n  " + "\n  ".join(failures))
         return 1
+    path = write_bench_json(repo, rows)
     print(f"\nOK: {len(rows)} rows, {len(REQUIRED)} required, all healthy")
+    print(f"baseline written to {path}")
     return 0
 
 

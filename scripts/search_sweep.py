@@ -12,6 +12,8 @@ Examples:
       --shapes 128,128,128,128 --beam 4 --interpret --dtype float32
   python scripts/search_sweep.py --spec matmul \
       --shapes "256,256,256;512,512,512" --no-measure   # analytic only
+  python scripts/search_sweep.py --spec matmul --shapes 512,512,512 \
+      --interpret --with-grads   # also sweep the derived dA/dB specs
 
 Exit code is non-zero if any sweep point fails to produce a plan or the
 persisted winner does not round-trip.
@@ -61,6 +63,10 @@ def main() -> int:
                          "~/.cache/repro/plans.json)")
     ap.add_argument("--fresh", action="store_true",
                     help="ignore previously stored plans for these keys")
+    ap.add_argument("--with-grads", action="store_true",
+                    help="also sweep each spec's derived backward specs "
+                         "(grad.derive: dA, dB, ...) so training's "
+                         "cotangent GEMMs get searched plans too")
     args = ap.parse_args()
 
     import numpy as np
@@ -70,6 +76,7 @@ def main() -> int:
         default_plan_db,
         search_schedule,
         spec_from_name,
+        sweep_specs,
     )
 
     db = PlanDB(args.plan_db) if args.plan_db else default_plan_db()
@@ -81,10 +88,17 @@ def main() -> int:
     if not shapes:
         ap.error("--shapes is empty")
 
-    failures = 0
+    points = []
     for shape in shapes:
-        spec = spec_from_name(args.spec, shape)
-        print(f"== {args.spec} {'x'.join(map(str, shape))} "
+        root = spec_from_name(args.spec, shape)
+        points.extend(
+            (label, spec, shape)
+            for label, spec in sweep_specs(root, with_grads=args.with_grads)
+        )
+
+    failures = 0
+    for label, spec, shape in points:
+        print(f"== {args.spec} {'x'.join(map(str, shape))} [{label}] "
               f"(beam={args.beam}, topk={args.topk}, dtype={args.dtype}) ==")
         res = search_schedule(
             spec,

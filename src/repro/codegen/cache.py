@@ -10,10 +10,14 @@ to a serialized winner — either a full ``Schedule`` (split chain + tier
 levels, see ``schedule_to_dict``) or an arbitrary small JSON value such as
 ``choose_matmul_blocks`` output or measured variant rankings.
 
-Concurrency: reads are lazy, writes are atomic (tmp file + ``os.replace``)
-and re-read the file first, so concurrent tuners lose at most their own
-last write, never corrupt the file.  A corrupt/alien file degrades to an
-empty cache rather than an error.
+Concurrency: reads are lazy; writes are atomic (tmp file + ``os.replace``)
+and hold an exclusive inter-process file lock (``<path>.lock``, flock)
+around the read-merge-write, so concurrent writers — e.g. two sweep
+processes persisting fwd+bwd plans for the same shape — never corrupt the
+file *and* never lose each other's entries.  The lock is POSIX-only
+(flock); where ``fcntl`` is unavailable writes stay atomic and
+thread-safe but a concurrent *process* can still drop another's entry.
+A corrupt/alien file degrades to an empty cache rather than an error.
 
 Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.
@@ -21,12 +25,18 @@ Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
 import tempfile
 import threading
 from typing import Any, Dict, Optional
+
+try:
+    import fcntl
+except ImportError:  # non-posix: fall back to thread-lock-only writes
+    fcntl = None  # type: ignore[assignment]
 
 from ..core.enumerate import ContractionSpec
 from ..core.schedule import Level, Schedule
@@ -74,6 +84,28 @@ def cache_key(
     }
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Exclusive inter-process lock for read-merge-write on ``path``.
+
+    Uses a sibling ``<path>.lock`` file so the lock survives the atomic
+    ``os.replace`` of the data file itself (locking the data fd would be
+    useless: replace swaps the inode out from under the lock).  The
+    thread-level lock in ``AutotuneCache`` still guards in-process use;
+    this one makes two *processes* — e.g. concurrent fwd+bwd plan sweeps —
+    linearize their writes instead of losing them (tests/test_plandb_concurrency.py).
+    """
+    if fcntl is None:
+        yield
+        return
+    with open(path + ".lock", "a") as lf:
+        fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
 
 
 def schedule_to_dict(schedule: Schedule) -> Dict[str, Any]:
@@ -126,24 +158,27 @@ class AutotuneCache:
 
     def put(self, key: str, value: Any) -> None:
         with self._lock:
-            self._data = None  # merge with concurrent writers
-            data = dict(self._load())
-            data[key] = value
-            self._data = data
             d = os.path.dirname(self.path)
             if d:
                 os.makedirs(d, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(data, f, indent=1, sort_keys=True)
-                os.replace(tmp, self.path)
-            except BaseException:
+            # the flock spans reload -> merge -> replace, so a concurrent
+            # process's put cannot interleave and drop this write
+            with _file_lock(self.path):
+                self._data = None  # merge with concurrent writers
+                data = dict(self._load())
+                data[key] = value
+                self._data = data
+                fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
                 try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
+                    with os.fdopen(fd, "w") as f:
+                        json.dump(data, f, indent=1, sort_keys=True)
+                    os.replace(tmp, self.path)
+                except BaseException:
+                    try:
+                        os.unlink(tmp)
+                    except OSError:
+                        pass
+                    raise
 
     def clear(self) -> None:
         with self._lock:

@@ -19,7 +19,9 @@ The consumer that closes the paper's loop is ``repro.search``: it feeds
 ``variant_orders`` + per-tier subdivision choices through the analytic
 cost cut (``core.cost``), lowers the survivors via ``repro.codegen``, and
 measures them — see ``src/repro/search/__init__.py`` for the pipeline
-diagram.
+diagram.  ``repro.grad.derive`` generates *new* specs from these by index
+calculus (the backward contractions of training), which re-enter the same
+walk/search/codegen machinery as first-class citizens.
 """
 
 from __future__ import annotations
@@ -160,6 +162,22 @@ def _product_scalar(elems: Dict[str, E.Expr]) -> E.Expr:
     return out
 
 
+def einsum_formula(spec: ContractionSpec) -> str:
+    """np/jnp einsum string for a ROOT spec, operands in spec order.
+
+    The single home of the index-letter mapping — shared by the search
+    measurement oracle (``search.measure.einsum_reference``), the grad
+    einsum fallbacks (``grad.vjp``) and the test layer.
+    """
+    spec = spec.root()
+    letters = {i: chr(ord("a") + n) for n, i in enumerate(spec.indices)}
+    subs = ",".join(
+        "".join(letters[i] for i in axes) for axes in spec.operands.values()
+    )
+    out = "".join(letters[i] for i in spec.output)
+    return f"{subs}->{out}"
+
+
 # canonical specs used by the paper -------------------------------------------
 
 
@@ -221,7 +239,12 @@ def chain_matmul_spec(n: int, m: int, p: int, q: int) -> ContractionSpec:
 
 
 def transposed_matmul_spec(n: int, m: int, k: int) -> ContractionSpec:
-    """out[i,k] = sum_j A[j,i] B[j,k] — A stored transposed (weight grads)."""
+    """out[i,k] = sum_j A[j,i] B[j,k] — A stored transposed (weight grads).
+
+    This is the hand-written ancestor of the *derived* backward specs:
+    ``repro.grad.derive.derived_spec(matmul_spec(...), "B")`` produces the
+    same contraction shape mechanically (dB = Aᵀ·g), for any spec family.
+    """
     return ContractionSpec(
         name="transposed_matmul",
         operands={"A": ("j", "i"), "B": ("j", "k")},

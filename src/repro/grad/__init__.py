@@ -1,0 +1,45 @@
+"""repro.grad — differentiable generated kernels.
+
+The paper's thesis is that one pattern formalism covers *every* dense
+contraction in a workload; before this package only the forward pass did.
+``grad`` closes the training half:
+
+  ``derive``   backward ContractionSpecs by index calculus — for each
+               operand ``W`` of a forward spec, ``dW`` is itself a
+               sum-of-products contraction (dA = g·Bᵀ, dB = Aᵀ·g for the
+               matmul; three-operand contractions for the chain), named
+               ``<spec>.d<W>`` so it owns plan-DB/autotune-cache keys.
+  ``vjp``      ``jax.custom_vjp`` wrappers pairing every ``ops`` primal
+               with a backward pass whose cotangent GEMMs compile through
+               the same ``ContractionSpec -> search/plan DB -> codegen``
+               pipeline as the forward kernels.
+
+``ops`` routes through these wrappers by default (``differentiable=True``),
+so ``jax.grad`` of a loss built on ``ops.dense``/``ops.dense_act`` works on
+TPU with generated kernels on both sides of the tape — see
+``launch.steps.make_train_step``.  Sweeping backward specs alongside the
+forward: ``search.search_schedule_with_grads`` /
+``scripts/search_sweep.py --with-grads``.
+"""
+
+from .derive import COTANGENT, derived_spec, derived_specs
+from .vjp import (
+    apply_spec,
+    batched_dense_vjp,
+    chain_dense_vjp,
+    dense_act_vjp,
+    dense_transposed_vjp,
+    dense_vjp,
+)
+
+__all__ = [
+    "COTANGENT",
+    "apply_spec",
+    "batched_dense_vjp",
+    "chain_dense_vjp",
+    "dense_act_vjp",
+    "dense_transposed_vjp",
+    "dense_vjp",
+    "derived_spec",
+    "derived_specs",
+]

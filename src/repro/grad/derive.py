@@ -1,0 +1,100 @@
+"""Backward ContractionSpecs by index calculus — grads as mapping problems.
+
+For a sum-of-products contraction
+
+    out[output] = sum_{reduce} prod_X X[axes_X]
+
+the cotangent of operand ``W`` under upstream gradient ``g = d loss / d out``
+is itself a sum-of-products contraction over the *same* index set:
+
+    dW[axes_W] = sum_{indices - axes_W} g[output] * prod_{X != W} X[axes_X]
+
+i.e. differentiation just moves ``W``'s axes to the output side and the
+forward output's axes to an operand (the cotangent, named ``dout`` here).
+For the canonical matmul this recovers the classical pair
+
+    dA[i,j] = sum_k g[i,k] B[j,k]     (a transposed-operand GEMM — compare
+    dB[j,k] = sum_i A[i,j] g[i,k]      ``core.enumerate.transposed_matmul_spec``)
+
+and for ``chain_matmul`` it produces genuine three-operand contractions,
+which is exactly the Linnea/LAMP observation that derived expressions are
+mapping problems of their own: every derived spec re-enters the same
+``search``/``codegen`` pipeline as the primal, with its own plan-DB and
+autotune-cache keys (``name`` differs, so ``codegen.cache.spec_signature``
+differs).
+
+Consumers: ``grad.vjp`` (the custom_vjp backward passes),
+``search.space.sweep_specs`` (``--with-grads`` sweeps) and the differential
+test layer (``tests/test_grad.py``, ``tests/test_differential.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from ..core import enumerate as _enum
+from ..core.enumerate import ContractionSpec
+
+#: operand name carrying the upstream cotangent in every derived spec
+COTANGENT = "dout"
+
+
+def _check_differentiable(root: ContractionSpec) -> None:
+    if root.reducer != "+":
+        raise NotImplementedError(
+            f"cannot derive gradients for reducer {root.reducer!r}; "
+            "only '+' contractions are sum-of-products"
+        )
+    if root.scalar is not _enum._product_scalar:
+        raise NotImplementedError(
+            f"spec {root.name!r} has a custom scalar body; gradient "
+            "derivation assumes the default product scalar"
+        )
+    if COTANGENT in root.operands:
+        raise ValueError(
+            f"operand name {COTANGENT!r} is reserved for the cotangent"
+        )
+
+
+def derived_spec(spec: ContractionSpec, wrt: str) -> ContractionSpec:
+    """The backward contraction for ``d loss / d wrt`` of a forward spec.
+
+    The result is a ROOT spec named ``<name>.d<wrt>`` whose operands are
+    the cotangent (``dout``, carrying the forward output axes) followed by
+    every forward operand except ``wrt`` in their original order, and whose
+    output axes are ``wrt``'s axes in *storage* order — so the kernel's
+    result drops straight into the cotangent slot with no transpose.
+    """
+    root = spec.root()
+    _check_differentiable(root)
+    if wrt not in root.operands:
+        raise ValueError(
+            f"unknown operand {wrt!r}; spec has {tuple(root.operands)}"
+        )
+    operands = {COTANGENT: root.output}
+    for name, axes in root.operands.items():
+        if name != wrt:
+            operands[name] = axes
+    covered = {i for axes in operands.values() for i in axes}
+    missing = [i for i in root.operands[wrt] if i not in covered]
+    if missing:
+        # an index living only in `wrt` and reduced away forward would need
+        # a broadcast (ones-expansion) backward; no current spec family
+        # does this, so refuse loudly instead of silently mis-deriving
+        raise NotImplementedError(
+            f"index {missing} of {wrt!r} appears in no other operand nor "
+            f"the output; its cotangent is a broadcast, not a contraction"
+        )
+    return ContractionSpec(
+        name=f"{root.name}.d{wrt}",
+        operands=operands,
+        output=root.operands[wrt],
+        extents=dict(root.extents),
+        reducer=root.reducer,
+    )
+
+
+def derived_specs(spec: ContractionSpec) -> Dict[str, ContractionSpec]:
+    """Backward specs for every operand: {operand name -> dX spec}."""
+    root = spec.root()
+    return {name: derived_spec(root, name) for name in root.operands}

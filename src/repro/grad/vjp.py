@@ -1,0 +1,295 @@
+"""custom_vjp wrappers: both primal and cotangent GEMMs through codegen.
+
+``jax.value_and_grad`` cannot differentiate ``pallas_call``, so before this
+module existed training either broke on TPU or silently bypassed the
+searched/tuned kernels for the backward GEMMs — the majority of training
+FLOPs.  Each wrapper here pairs an ``ops`` primal with a hand-derived VJP
+whose GEMMs are the *derived ContractionSpecs* of ``grad.derive``, lowered
+through the very same pipeline as the forward pass
+(``ops._tuned_kernel``: ranked plan DB first, persistent autotune cache
+second).  A ``scripts/search_sweep.py --with-grads`` run therefore upgrades
+forward and backward kernels together.
+
+Wrappers are built by memoized factories keyed on the static call
+parameters (dtype, interpret, epilogue config); the array-shape dispatch
+(kernel vs ``lax``/einsum fallback) happens at trace time inside fwd/bwd,
+mirroring the corresponding ``ops`` entry point exactly.  Cotangents are
+cast to their primal operand's dtype, so mixed-precision training sees
+bf16 backward GEMMs with f32 accumulation, like the forward.
+
+Consumed by ``repro.ops`` (``differentiable=True`` default) and hence by
+``launch.steps.make_train_step`` — training needs no dot_general fallback.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.enumerate import einsum_formula
+from .derive import COTANGENT, derived_specs
+
+
+def apply_spec(
+    spec,
+    arrays: Dict[str, jax.Array],
+    *,
+    out_dtype,
+    interpret: bool = False,
+    use_kernel: bool = False,
+):
+    """Evaluate ``spec`` over named arrays — generated kernel or einsum.
+
+    The kernel path is the exact ``ops._tuned_kernel`` pipeline the primal
+    uses, keyed by this (possibly derived) spec, so backward GEMMs acquire
+    their own plan-DB / autotune-cache entries.  The fallback is an einsum
+    with f32 accumulation, matching the non-TPU primal paths.
+    """
+    if use_kernel:
+        from ..ops import _tuned_kernel
+
+        first = next(iter(spec.operands))
+        kern = _tuned_kernel(
+            spec, arrays[first].dtype, interpret=interpret
+        )
+        return kern(*(arrays[n] for n in spec.operands)).astype(out_dtype)
+    return jnp.einsum(
+        einsum_formula(spec),
+        *(arrays[n] for n in spec.operands),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def _cotangent_gemms(spec, g, operands, *, interpret, use_kernel):
+    """All operand cotangents of ``spec`` via its derived backward specs."""
+    out = {}
+    for wrt, dspec in derived_specs(spec).items():
+        arrays = {COTANGENT: g.astype(operands[wrt].dtype)}
+        for name, arr in operands.items():
+            if name != wrt:
+                arrays[name] = arr
+        out[wrt] = apply_spec(
+            dspec,
+            arrays,
+            out_dtype=operands[wrt].dtype,
+            interpret=interpret,
+            use_kernel=use_kernel,
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-op factories (lru_cache => one custom_vjp object per static config)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def dense_vjp(out_dtype: str, interpret: bool):
+    """(..., D) @ (D, F) with backward dA/dB through derived-spec kernels."""
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w):
+        from .. import ops
+
+        return ops._dense_raw(x, w, out_dt, interpret)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        if x.ndim != 2:
+            # the primal lowered to lax.dot over the flattened batch; keep
+            # the classical batched VJP here (still f32-accumulated)
+            dx = jnp.einsum(
+                "...f,df->...d", g, w, preferred_element_type=jnp.float32
+            )
+            dw = jnp.einsum(
+                "...d,...f->df", x, g, preferred_element_type=jnp.float32
+            )
+            return dx.astype(x.dtype), dw.astype(w.dtype)
+        from .. import ops
+        from ..core.enumerate import matmul_spec
+
+        m, d = x.shape
+        _, fdim = w.shape
+        spec = matmul_spec(m, d, fdim)
+        cots = _cotangent_gemms(
+            spec, g, {"A": x, "B": w},
+            interpret=interpret,
+            use_kernel=ops._dense_kernel_ok(x, w, interpret),
+        )
+        return cots["A"], cots["B"]
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def batched_dense_vjp(out_dtype: str, interpret: bool):
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w):
+        from .. import ops
+
+        return ops._batched_dense_raw(x, w, out_dt, interpret)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        from .. import ops
+        from ..core.enumerate import batched_matmul_spec
+
+        x, w = res
+        b, m, d = x.shape
+        _, _, fdim = w.shape
+        spec = batched_matmul_spec(b, m, d, fdim)
+        cots = _cotangent_gemms(
+            spec, g, {"A": x, "B": w},
+            interpret=interpret,
+            use_kernel=ops._batched_kernel_ok(x, w, interpret),
+        )
+        return cots["A"], cots["B"]
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def chain_dense_vjp(out_dtype: str, interpret: bool):
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(a, b, c):
+        from .. import ops
+
+        return ops._chain_dense_raw(a, b, c, out_dt, interpret)
+
+    def fwd(a, b, c):
+        return f(a, b, c), (a, b, c)
+
+    def bwd(res, g):
+        from .. import ops
+        from ..core.enumerate import chain_matmul_spec
+
+        a, b, c = res
+        m, k1 = a.shape
+        _, k2 = b.shape
+        _, n = c.shape
+        spec = chain_matmul_spec(m, k1, k2, n)
+        cots = _cotangent_gemms(
+            spec, g, {"A": a, "B": b, "C": c},
+            interpret=interpret,
+            use_kernel=ops._generic_kernel_ok(interpret),
+        )
+        return cots["A"], cots["B"], cots["C"]
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def dense_transposed_vjp(out_dtype: str, interpret: bool):
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(a, b):
+        from .. import ops
+
+        return ops._dense_transposed_raw(a, b, out_dt, interpret)
+
+    def fwd(a, b):
+        return f(a, b), (a, b)
+
+    def bwd(res, g):
+        from .. import ops
+        from ..core.enumerate import transposed_matmul_spec
+
+        a, b = res
+        d, m = a.shape
+        _, fdim = b.shape
+        spec = transposed_matmul_spec(m, d, fdim)
+        cots = _cotangent_gemms(
+            spec, g, {"A": a, "B": b},
+            interpret=interpret,
+            use_kernel=ops._generic_kernel_ok(interpret),
+        )
+        return cots["A"], cots["B"]
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def dense_act_vjp(act: str, eps: float, out_dtype: str, interpret: bool):
+    """Fused dense+bias+norm+act with an epilogue-aware backward.
+
+    The fused forward never materializes the pre-epilogue accumulator, so
+    the backward *recomputes* it with one extra GEMM (same spec => same
+    plan/cache entry as the primal), runs the elementwise epilogue VJP on
+    it via ``jax.vjp`` of ``codegen.Epilogue.apply``, then routes the
+    resulting dacc through the derived dA/dB GEMM specs.
+    """
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w, beta, mean, var):
+        from .. import ops
+
+        return ops._dense_act_raw(
+            x, w, beta, mean, var, act=act, eps=eps,
+            out_dtype=out_dt, interpret=interpret,
+        )
+
+    def fwd(x, w, beta, mean, var):
+        return f(x, w, beta, mean, var), (x, w, beta, mean, var)
+
+    def bwd(res, g):
+        from .. import ops
+        from ..codegen.epilogue import Epilogue
+        from ..core.enumerate import matmul_spec
+
+        x, w, beta, mean, var = res
+        m, d = x.shape
+        _, fdim = w.shape
+        spec = matmul_spec(m, d, fdim)
+        use_kernel = ops._generic_kernel_ok(interpret)
+
+        acc = apply_spec(
+            spec, {"A": x, "B": w},
+            out_dtype=jnp.float32, interpret=interpret,
+            use_kernel=use_kernel,
+        )
+        epi = Epilogue(act=act, bias=True, norm=True, eps=eps)
+
+        def epi_fn(acc_, beta_, mean_, var_):
+            vectors = {
+                "bias": beta_.astype(jnp.float32).reshape(1, -1),
+                "mean": mean_.astype(jnp.float32).reshape(1, -1),
+                "var": var_.astype(jnp.float32).reshape(1, -1),
+            }
+            return epi.apply(acc_, vectors)
+
+        _, epi_vjp = jax.vjp(epi_fn, acc, beta, mean, var)
+        dacc, dbeta, dmean, dvar = epi_vjp(g.astype(jnp.float32))
+        cots = _cotangent_gemms(
+            spec, dacc, {"A": x, "B": w},
+            interpret=interpret, use_kernel=use_kernel,
+        )
+        return (
+            cots["A"],
+            cots["B"],
+            dbeta.astype(beta.dtype),
+            dmean.astype(mean.dtype),
+            dvar.astype(var.dtype),
+        )
+
+    f.defvjp(fwd, bwd)
+    return f

@@ -37,7 +37,8 @@ class BatchServer:
     """Fixed-slot batch server (the slot count is the serving batch size)."""
 
     def __init__(self, cfg, *, batch_size: int, max_len: int,
-                 extra_batch=None, warm_gemms=(), search_gemms=()):
+                 extra_batch=None, warm_gemms=(), search_gemms=(),
+                 search_grads: bool = True):
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch_size = batch_size
@@ -66,13 +67,21 @@ class BatchServer:
             # the one ops.dense derives from the serving activations.
             # On a TPU replica measure the real kernels; the interpreter
             # only stands in for the clock where there is no TPU.
+            # search_grads: the plan DB is fleet-shared, so the same
+            # warmup also sweeps each GEMM's derived backward specs
+            # (repro.grad) and training replicas pick up searched
+            # cotangent kernels; --no-search-grads skips the 2 extra
+            # sweeps per shape on inference-only replicas.
             n = search_gemm_plans(
                 search_gemms,
                 dtype=jnp.bfloat16,
                 interpret=jax.default_backend() != "tpu",
                 plan_db=db,
+                with_grads=search_grads,
             )
-            print(f"[serve] searched {n} GEMM plan(s) -> {db.path}")
+            what = "fwd + derived bwd" if search_grads else "fwd only"
+            print(f"[serve] searched {n} GEMM plan(s) "
+                  f"({what}) -> {db.path}")
         self.params, _ = self.api.init(cfg, jax.random.key(0))
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, self.cfg, c, t)
@@ -136,7 +145,14 @@ def main():
         help="semicolon-separated M,K,N GEMM shapes to run the full "
              "cost-guided variant search on (enumerate -> prune -> "
              "measure) and persist as ranked plans; ops.dense then "
-             "serves the measured winner",
+             "serves the measured winner.  Derived backward specs "
+             "(repro.grad) are swept alongside each shape unless "
+             "--no-search-grads",
+    )
+    ap.add_argument(
+        "--no-search-grads", action="store_true",
+        help="with --search-gemms, sweep only the forward specs "
+             "(inference-only replicas skip the backward-plan cost)",
     )
     args = ap.parse_args()
 
@@ -175,6 +191,7 @@ def main():
         max_len=args.prompt_len + args.max_new + 1,
         warm_gemms=warm,
         search_gemms=search,
+        search_grads=not args.no_search_grads,
     )
     stats = server.run(reqs)
     print(

@@ -3,6 +3,15 @@
 These are what both the real drivers (train.py / serve.py) and the dry-run
 lower.  All sharding is expressed as in/out NamedShardings derived from the
 logical-axes trees (launch.sharding); GSPMD inserts the collectives.
+
+Training differentiates through the generated kernels directly: every
+model matmul is a ``repro.ops`` entry point, which registers a
+``jax.custom_vjp`` (``repro.grad``) whose backward GEMMs are derived
+ContractionSpecs compiled through the same plan-DB/autotune pipeline as
+the forward.  ``jax.value_and_grad`` below therefore needs no
+``dot_general`` fallback on TPU — both sides of the tape run searched/
+tuned Pallas kernels (sweep them together with
+``scripts/search_sweep.py --with-grads``).
 """
 
 from __future__ import annotations
@@ -99,6 +108,15 @@ def make_train_step(
     lr_schedule: Optional[Callable] = None,
     microbatch: int = 1,
 ):
+    """Loss + grad + optimizer update for one (micro)batch.
+
+    ``jax.value_and_grad`` here differentiates straight through the
+    generated kernels: the model's ``ops.dense``/``ops.dense_act`` calls
+    carry custom VJPs (``repro.grad``) whose cotangent GEMMs
+    (dA = g·Bᵀ, dB = Aᵀ·g) compile under their own derived-spec keys —
+    the backward pass is generated-kernel traffic, not a dot_general
+    fallback.
+    """
     api = get_api(cfg)
 
     def train_step(params, opt_state, batch):

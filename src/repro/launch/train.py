@@ -5,6 +5,12 @@ mesh (same code path — the mesh and shardings come from launch.mesh /
 launch.sharding).  Fault tolerance is the runtime.fault loop: deterministic
 data + atomic checkpoints = exact replay after restore.
 
+On TPU the whole step — forward *and* backward — runs generated kernels:
+``repro.grad`` gives every ``ops`` matmul a custom VJP whose cotangent
+GEMMs go through the same searched/tuned pipeline (see
+``launch.steps.make_train_step``); warm their plans with
+``scripts/search_sweep.py --with-grads`` before a big run.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
       --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ck
 """

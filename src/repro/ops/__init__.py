@@ -18,6 +18,22 @@ these before ``codegen`` existed):
   ``dense_transposed``out[i,k]   = sum_j a[j,i] b[j,k]
   ``dense_act``       epilogue-fused dense+bias+norm+activation
                       (the generated replacement for kernels/fused_dense_act)
+
+All entry points are **differentiable by default**: whenever the call
+would dispatch to a generated kernel, ``differentiable=True`` routes
+through the ``repro.grad`` custom_vjp wrappers, whose backward GEMMs are
+derived ContractionSpecs (``grad.derive``) compiled through this same
+plan-DB/autotune pipeline — so ``jax.grad`` of a loss built on these ops
+runs generated kernels on both sides of the tape (``launch.steps``).  On
+the non-kernel paths (CPU, unaligned shapes) the op stays a plain
+einsum/dot, so JAX's native autodiff — forward mode included — applies
+unchanged.  Pass ``differentiable=False`` to get the bare primal (no VJP
+registered; ``jax.grad`` through a raw Pallas kernel raises).
+
+Caveat: ``jax.custom_vjp`` supports reverse mode only, so forward-mode
+autodiff (``jax.jvp`` / ``jax.jacfwd`` / ``jax.linearize``) raises
+exactly where the generated-kernel dispatch fires (the raw Pallas kernel
+has no JVP either way); everywhere else it works as before.
 """
 
 from __future__ import annotations
@@ -93,13 +109,33 @@ def warm_dense_cache(shapes, dtype=jnp.bfloat16) -> int:
     return count
 
 
-def dense(x: jax.Array, w: jax.Array, out_dtype=None,
-          interpret: bool = False) -> jax.Array:
-    """x: (..., D) @ w: (D, F) -> (..., F), f32 accumulation."""
-    out_dtype = out_dtype or x.dtype
-    if (_use_pallas() or interpret) and x.ndim == 2 and all(
+def _dt_name(dtype) -> str:
+    """Hashable dtype key for the grad factory caches."""
+    return np.dtype(dtype).name
+
+
+# -- kernel-dispatch predicates, shared with the grad.vjp backward passes --
+# The custom_vjp wrapping is gated on exactly these: where an op lowers to
+# a plain einsum/dot anyway, native JAX autodiff (fwd mode included) stays
+# in charge and the wrapper would only subtract capability.
+
+
+def _dense_kernel_ok(x, w, interpret: bool) -> bool:
+    return (_use_pallas() or interpret) and x.ndim == 2 and all(
         s % 128 == 0 for s in (*x.shape, w.shape[1])
-    ):
+    )
+
+
+def _batched_kernel_ok(x, w, interpret: bool) -> bool:
+    return (_use_pallas() or interpret) and x.ndim == 3 and w.ndim == 3
+
+
+def _generic_kernel_ok(interpret: bool) -> bool:
+    return _use_pallas() or interpret
+
+
+def _dense_raw(x, w, out_dtype, interpret):
+    if _dense_kernel_ok(x, w, interpret):
         from ..core.enumerate import matmul_spec
 
         m, d = x.shape
@@ -111,6 +147,24 @@ def dense(x: jax.Array, w: jax.Array, out_dtype=None,
     return jnp.dot(
         x, w, preferred_element_type=jnp.float32
     ).astype(out_dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, out_dtype=None,
+          interpret: bool = False, differentiable: bool = True) -> jax.Array:
+    """x: (..., D) @ w: (D, F) -> (..., F), f32 accumulation.
+
+    With ``differentiable`` (the default), a call dispatching to the
+    generated kernel goes through ``grad.dense_vjp``: same primal, plus a
+    custom VJP whose dA/dB GEMMs compile through the generated-kernel
+    pipeline under their own derived-spec keys (``matmul.dA`` /
+    ``matmul.dB``).  Fallback paths stay natively differentiable.
+    """
+    out_dtype = out_dtype or x.dtype
+    if differentiable and _dense_kernel_ok(x, w, interpret):
+        from ..grad import dense_vjp
+
+        return dense_vjp(_dt_name(out_dtype), bool(interpret))(x, w)
+    return _dense_raw(x, w, out_dtype, interpret)
 
 
 def weighted_dense(x, w, g, out_dtype=None):
@@ -125,10 +179,8 @@ def weighted_dense(x, w, g, out_dtype=None):
     ).astype(out_dtype)
 
 
-def batched_dense(x, w, out_dtype=None, interpret: bool = False):
-    """x: (B, M, D) @ w: (B, D, F) -> (B, M, F) through the generator."""
-    out_dtype = out_dtype or x.dtype
-    if (_use_pallas() or interpret) and x.ndim == 3 and w.ndim == 3:
+def _batched_dense_raw(x, w, out_dtype, interpret):
+    if _batched_kernel_ok(x, w, interpret):
         from ..core.enumerate import batched_matmul_spec
 
         b, m, d = x.shape
@@ -142,10 +194,19 @@ def batched_dense(x, w, out_dtype=None, interpret: bool = False):
     ).astype(out_dtype)
 
 
-def chain_dense(a, b, c, out_dtype=None, interpret: bool = False):
-    """a @ b @ c without materializing the intermediate in HBM."""
-    out_dtype = out_dtype or a.dtype
-    if _use_pallas() or interpret:
+def batched_dense(x, w, out_dtype=None, interpret: bool = False,
+                  differentiable: bool = True):
+    """x: (B, M, D) @ w: (B, D, F) -> (B, M, F) through the generator."""
+    out_dtype = out_dtype or x.dtype
+    if differentiable and _batched_kernel_ok(x, w, interpret):
+        from ..grad import batched_dense_vjp
+
+        return batched_dense_vjp(_dt_name(out_dtype), bool(interpret))(x, w)
+    return _batched_dense_raw(x, w, out_dtype, interpret)
+
+
+def _chain_dense_raw(a, b, c, out_dtype, interpret):
+    if _generic_kernel_ok(interpret):
         from ..core.enumerate import chain_matmul_spec
 
         m, k1 = a.shape
@@ -161,10 +222,24 @@ def chain_dense(a, b, c, out_dtype=None, interpret: bool = False):
     ).astype(out_dtype)
 
 
-def dense_transposed(a, b, out_dtype=None, interpret: bool = False):
-    """a: (D, M) (stored transposed) , b: (D, F) -> (M, F) = a.T @ b."""
+def chain_dense(a, b, c, out_dtype=None, interpret: bool = False,
+                differentiable: bool = True):
+    """a @ b @ c without materializing the intermediate in HBM.
+
+    The backward specs are three-operand contractions (e.g.
+    ``chain_matmul.dB``: dB[j,k] = sum_il A[i,j] g[i,l] C[k,l]) — derived
+    expressions treated as first-class mapping problems, per Linnea/LAMP.
+    """
     out_dtype = out_dtype or a.dtype
-    if _use_pallas() or interpret:
+    if differentiable and _generic_kernel_ok(interpret):
+        from ..grad import chain_dense_vjp
+
+        return chain_dense_vjp(_dt_name(out_dtype), bool(interpret))(a, b, c)
+    return _chain_dense_raw(a, b, c, out_dtype, interpret)
+
+
+def _dense_transposed_raw(a, b, out_dtype, interpret):
+    if _generic_kernel_ok(interpret):
         from ..core.enumerate import transposed_matmul_spec
 
         d, m = a.shape
@@ -178,18 +253,21 @@ def dense_transposed(a, b, out_dtype=None, interpret: bool = False):
     ).astype(out_dtype)
 
 
-def dense_act(
-    x, w, beta, mean, var,
-    *, act: str = "gelu", eps: float = 1e-5,
-    out_dtype=None, interpret: bool = False,
-):
-    """Generated dense + bias + normalization + activation (paper eqs 3-5).
+def dense_transposed(a, b, out_dtype=None, interpret: bool = False,
+                     differentiable: bool = True):
+    """a: (D, M) (stored transposed) , b: (D, F) -> (M, F) = a.T @ b."""
+    out_dtype = out_dtype or a.dtype
+    if differentiable and _generic_kernel_ok(interpret):
+        from ..grad import dense_transposed_vjp
 
-    Subsumes ``kernels/fused_dense_act``: the epilogue runs on the f32
-    accumulator tile before the store, so y and z never round-trip HBM.
-    """
-    out_dtype = out_dtype or x.dtype
-    if _use_pallas() or interpret:
+        return dense_transposed_vjp(
+            _dt_name(out_dtype), bool(interpret)
+        )(a, b)
+    return _dense_transposed_raw(a, b, out_dtype, interpret)
+
+
+def _dense_act_raw(x, w, beta, mean, var, *, act, eps, out_dtype, interpret):
+    if _generic_kernel_ok(interpret):
         from .. import codegen
         from ..core.enumerate import matmul_spec
 
@@ -205,3 +283,29 @@ def dense_act(
     return fused_dense_act_ref(
         x, w, beta, mean, var, act=act, eps=eps
     ).astype(out_dtype)
+
+
+def dense_act(
+    x, w, beta, mean, var,
+    *, act: str = "gelu", eps: float = 1e-5,
+    out_dtype=None, interpret: bool = False, differentiable: bool = True,
+):
+    """Generated dense + bias + normalization + activation (paper eqs 3-5).
+
+    Subsumes ``kernels/fused_dense_act``: the epilogue runs on the f32
+    accumulator tile before the store, so y and z never round-trip HBM.
+    The custom backward (``grad.dense_act_vjp``) recomputes the accumulator
+    with one extra GEMM, runs the elementwise epilogue VJP on it, and
+    routes dacc through the derived dA/dB GEMM specs.
+    """
+    out_dtype = out_dtype or x.dtype
+    if differentiable and _generic_kernel_ok(interpret):
+        from ..grad import dense_act_vjp
+
+        return dense_act_vjp(
+            act, float(eps), _dt_name(out_dtype), bool(interpret)
+        )(x, w, beta, mean, var)
+    return _dense_act_raw(
+        x, w, beta, mean, var,
+        act=act, eps=eps, out_dtype=out_dtype, interpret=interpret,
+    )

@@ -22,7 +22,9 @@ scores variants analytically, ``codegen`` compiles a hand-picked Schedule.
 ``ops.dense`` & friends consult ``default_plan_db()`` first, so one offline
 sweep (``scripts/search_sweep.py``) or one ``serve --search-gemms`` warmup
 upgrades every later call for the same spec/shape/dtype — batched, chained
-and transposed contractions included.
+and transposed contractions included.  With ``--with-grads`` (or
+``search_schedule_with_grads``) the sweep also covers the derived backward
+specs of ``repro.grad``, so training's cotangent GEMMs are searched too.
 """
 
 from __future__ import annotations
@@ -45,13 +47,14 @@ from ..core.enumerate import (
 from ..core.schedule import Schedule
 from .beam import CostEstimate, ScoredCandidate, SearchStats, beam_search, estimate
 from .measure import Measurement, einsum_reference, measure_schedules, reference_arrays
-from .plandb import PlanDB, default_plan_db, entry_from, plan_key
+from .plandb import PlanDB, default_plan_db, entry_from, grad_plan_keys, plan_key
 from .space import (
     Candidate,
     block_choices,
     candidate_orders,
     candidate_schedule,
     make_candidate,
+    sweep_specs,
 )
 
 #: spec families the sweep CLI / serve warmup can name; value = (ctor, arity)
@@ -266,6 +269,26 @@ def _sched_from(d, root: ContractionSpec) -> Schedule:
     return schedule_from_dict(d, root)
 
 
+def search_schedule_with_grads(
+    spec: ContractionSpec, **kwargs
+) -> Dict[str, SearchResult]:
+    """Sweep a forward spec together with its derived backward specs.
+
+    Runs the full ``search_schedule`` pipeline once per point of
+    ``space.sweep_specs(spec, with_grads=True)`` — the forward contraction
+    plus every cotangent GEMM from ``grad.derive`` (dA = g·Bᵀ etc.), each
+    persisted under its own plan key.  Returns ``{label -> SearchResult}``
+    with labels ``fwd``, ``dA``, ``dB``, ...  This is how training's
+    backward GEMMs pick up *searched* (not just analytically tuned)
+    schedules: ``ops``'s custom VJPs consult the plan DB by derived-spec
+    key on every backward pass.
+    """
+    return {
+        label: search_schedule(s, **kwargs)
+        for label, s in sweep_specs(spec, with_grads=True)
+    }
+
+
 def search_gemm_plans(
     shapes: Sequence[Tuple[int, int, int]],
     *,
@@ -275,23 +298,31 @@ def search_gemm_plans(
     interpret: bool = True,
     measure: bool = True,
     plan_db: Optional[PlanDB] = None,
+    with_grads: bool = False,
 ) -> int:
     """Search + persist plans for (m, k, n) GEMMs; returns #plans readied.
 
     The serving analogue of ``ops.warm_dense_cache``: where warmup fills
     the autotune cache with the analytic pick, this runs the full
     enumerate->prune->measure pipeline and stores the ranked ladder, so
-    ``ops.dense`` serves the *searched* schedule from then on.
+    ``ops.dense`` serves the *searched* schedule from then on.  With
+    ``with_grads`` each GEMM's derived backward specs are swept too (the
+    count then includes them), preparing the training fleet's cotangent
+    GEMMs from the same warmup.
     """
     db = plan_db if plan_db is not None else default_plan_db()
     n = 0
     for m, k, nn in shapes:
-        search_schedule(
-            matmul_spec(m, k, nn),
+        spec = matmul_spec(m, k, nn)
+        kw = dict(
             dtype=dtype, beam_width=beam_width, topk=topk,
             interpret=interpret, measure=measure, plan_db=db,
         )
-        n += 1
+        if with_grads:
+            n += len(search_schedule_with_grads(spec, **kw))
+        else:
+            search_schedule(spec, **kw)
+            n += 1
     return n
 
 
@@ -313,11 +344,14 @@ __all__ = [
     "einsum_reference",
     "entry_from",
     "estimate",
+    "grad_plan_keys",
     "make_candidate",
     "measure_schedules",
     "plan_key",
     "reference_arrays",
     "search_gemm_plans",
     "search_schedule",
+    "search_schedule_with_grads",
     "spec_from_name",
+    "sweep_specs",
 ]

@@ -47,14 +47,11 @@ def einsum_reference(
     spec: ContractionSpec, arrays: Dict[str, np.ndarray]
 ) -> np.ndarray:
     """np.einsum oracle for a root spec (f64 accumulation)."""
+    from ..core.enumerate import einsum_formula
+
     spec = spec.root()
-    letters = {i: chr(ord("a") + n) for n, i in enumerate(spec.indices)}
-    subs = ",".join(
-        "".join(letters[i] for i in axes) for axes in spec.operands.values()
-    )
-    out = "".join(letters[i] for i in spec.output)
     return np.einsum(
-        f"{subs}->{out}",
+        einsum_formula(spec),
         *(np.asarray(arrays[n], np.float64) for n in spec.operands),
     )
 

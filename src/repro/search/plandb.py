@@ -45,6 +45,24 @@ def plan_key(
     )
 
 
+def grad_plan_keys(
+    spec: ContractionSpec, dtype: Any, hardware: Optional[str] = None
+) -> Dict[str, str]:
+    """Plan keys of a forward spec's derived backward specs.
+
+    ``{operand -> key}`` for each cotangent GEMM (``grad.derive``): the
+    keys ``ops``'s custom VJPs look up at training time, and the ones a
+    ``--with-grads`` sweep fills.  Disjoint from the forward key because
+    ``spec_signature`` includes the derived spec's name and structure.
+    """
+    from ..grad import derived_specs
+
+    return {
+        wrt: plan_key(d, dtype, hardware)
+        for wrt, d in derived_specs(spec).items()
+    }
+
+
 class PlanDB:
     """Ranked schedules per (spec, dtype, hardware)."""
 
@@ -54,6 +72,12 @@ class PlanDB:
     @property
     def path(self) -> str:
         return self._cache.path
+
+    @property
+    def lookup_hits(self) -> int:
+        """Successful plan lookups so far — the supported counter for
+        benches/tests asserting that ops consulted the DB."""
+        return self._cache.hits
 
     def put(
         self,

@@ -127,6 +127,29 @@ def candidate_schedule(
     return Schedule(s, tuple(grid + seq + mxu)).validate()
 
 
+def sweep_specs(
+    spec: ContractionSpec, with_grads: bool = False
+) -> List[Tuple[str, ContractionSpec]]:
+    """(label, spec) points a sweep should cover for one forward spec.
+
+    With ``with_grads`` the forward spec is joined by its derived backward
+    specs (``grad.derive`` — dA, dB, ... by index calculus), so one sweep
+    prepares ranked plans for both the primal and the cotangent GEMMs of
+    training.  Every derived spec has its own name (``<spec>.d<op>``) and
+    therefore its own plan-DB key.  Consumed by
+    ``search.search_schedule_with_grads``, ``scripts/search_sweep.py
+    --with-grads`` and ``serve --search-gemms``.
+    """
+    out: List[Tuple[str, ContractionSpec]] = [("fwd", spec.root())]
+    if with_grads:
+        from ..grad import derived_specs
+
+        out.extend(
+            (f"d{wrt}", d) for wrt, d in derived_specs(spec).items()
+        )
+    return out
+
+
 # ---------------------------------------------------------------------------
 # choice generators
 # ---------------------------------------------------------------------------

@@ -12,6 +12,13 @@ matrix — no hypothesis dependency, and any failure reproduces from its
 The matrix is 6 spec families x 10 seeds = 60 float32 cases (the CI bar is
 >= 50), plus one bfloat16 case per family exercising the low-precision
 store path with f32 accumulation.
+
+The backward matrix (``test_derived_backward_specs``) extends this to the
+training half: for each sampled forward spec, every derived dX spec
+(``repro.grad.derive``) must itself be a valid codegen input — compiled
+under a *random* legal schedule, not just the default — and must match
+both the einsum oracle over the derived contraction and the true
+cotangent from ``jax.vjp`` of the forward einsum.
 """
 
 from __future__ import annotations
@@ -107,6 +114,66 @@ def test_generated_kernel_matches_oracles(family, seed):
         np.asarray(interp, np.float64), ref, rtol=rtol, atol=atol,
         err_msg=f"reference interpreter != einsum for {family} seed={seed}",
     )
+
+
+BWD_SEEDS = tuple(range(4))
+BWD_CASES = [(fam, seed) for fam in sorted(FAMILIES) for seed in BWD_SEEDS]
+
+
+@pytest.mark.parametrize("family,seed", BWD_CASES)
+def test_derived_backward_specs(family, seed):
+    """Derived dX specs are valid codegen inputs and true cotangents."""
+    from repro.core.enumerate import einsum_formula
+    from repro.grad import COTANGENT, derived_specs
+
+    spec, order, blocks = _draw_case(family, seed)
+    spec = spec.root()
+    arrays = reference_arrays(spec, dtype=np.float32, seed=9000 + seed)
+    rng = np.random.default_rng(9500 + seed)
+    g = rng.standard_normal(
+        tuple(spec.extents[i] for i in spec.output)
+    ).astype(np.float32)
+
+    # independent oracle: jax.vjp through the forward einsum
+    names = list(spec.operands)
+    formula = einsum_formula(spec)
+
+    def fwd(*ops_):
+        return jnp.einsum(formula, *ops_, preferred_element_type=jnp.float32)
+
+    _, vjp = jax.vjp(fwd, *(jnp.asarray(arrays[n]) for n in names))
+    oracle_cots = dict(zip(names, vjp(jnp.asarray(g))))
+
+    for wrt, dspec in derived_specs(spec).items():
+        darrays = {COTANGENT: g}
+        darrays.update(
+            {n: arrays[n] for n in spec.operands if n != wrt}
+        )
+        # a random legal schedule over the DERIVED spec's own index space —
+        # backward specs are full citizens of the search space
+        dorder = list(dspec.indices)
+        rng.shuffle(dorder)
+        dblocks = {
+            i: int(rng.choice(_divisors(dspec.extents[i])))
+            for i in dspec.indices
+        }
+        schedule = candidate_schedule(dspec, tuple(dorder), dblocks)
+        out = _run_kernel(dspec, schedule, darrays, jnp.float32)
+
+        rtol, atol = TOL[np.dtype(np.float32)]
+        ref = einsum_reference(dspec, darrays)
+        np.testing.assert_allclose(
+            out, ref, rtol=rtol, atol=atol,
+            err_msg=f"kernel != einsum for {dspec.name} seed={seed} "
+                    f"order={dorder} blocks={dblocks}",
+        )
+        cot = np.asarray(oracle_cots[wrt], np.float64)
+        scale = max(np.abs(cot).max(), 1.0)
+        np.testing.assert_allclose(
+            out / scale, cot / scale, rtol=1e-3, atol=1e-3,
+            err_msg=f"derived spec {dspec.name} is not the cotangent "
+                    f"of {family} wrt {wrt} (seed={seed})",
+        )
 
 
 @pytest.mark.parametrize("family", sorted(FAMILIES))

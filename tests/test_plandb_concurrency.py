@@ -1,0 +1,132 @@
+"""Plan-DB concurrency: parallel fwd+bwd sweep writers must not lose data.
+
+The scenario the ``--with-grads`` sweep creates in production: one process
+persists the forward plan for a shape while another persists the derived
+backward plans for the *same* shape (disjoint keys, same ``$REPRO_PLAN_DB``
+file).  ``AutotuneCache.put`` is a read-merge-write; without an
+inter-process lock two interleaved writers each load the same snapshot and
+the slower ``os.replace`` silently drops the faster writer's keys (the
+file stays valid JSON — corruption here means *lost entries*, which ops
+would silently re-tune around).  ``codegen.cache._file_lock`` (flock on
+``<path>.lock``) makes the merge atomic across processes; this test drives
+two real processes through enough interleaved writes that the pre-lock
+code loses entries with near-certainty.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core.enumerate import matmul_spec  # noqa: E402
+from repro.grad import derived_specs  # noqa: E402
+from repro.search.plandb import PlanDB, plan_key  # noqa: E402
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+#: each process writes its half of the (fwd, dA, dB) key family for every
+#: shape, interleaved with the other process via a tiny start barrier
+_WRITER = """
+import os, sys, time
+sys.path.insert(0, {src!r})
+import numpy as np
+from repro.core.enumerate import matmul_spec
+from repro.grad import derived_specs
+from repro.codegen import default_schedule
+from repro.search.plandb import PlanDB, entry_from
+
+which = sys.argv[1]
+n_shapes = int(sys.argv[2])
+db = PlanDB(os.environ["REPRO_PLAN_DB"])
+deadline = float(os.environ["WRITER_START"])
+while time.time() < deadline:   # start both processes together
+    time.sleep(0.001)
+for t in range(n_shapes):
+    m = 128 * (t + 1)
+    spec = matmul_spec(m, 128, 128)
+    points = {{"fwd": spec, **derived_specs(spec)}}
+    for label, s in points.items():
+        mine = (label == "fwd") == (which == "0")
+        if not mine:
+            continue
+        db.put(
+            s, np.float32,
+            [entry_from(default_schedule(s), score=1.0,
+                        lower_bound=0.0, fits_vmem=True)],
+        )
+print("writer", which, "done")
+"""
+
+
+def test_two_process_sweep_writers_keep_all_entries(tmp_path):
+    import time
+
+    path = str(tmp_path / "plans.json")
+    n_shapes = 14
+    env = dict(
+        os.environ,
+        REPRO_PLAN_DB=path,
+        WRITER_START=str(time.time() + 2.0),
+        JAX_PLATFORMS="cpu",
+    )
+    script = _WRITER.format(src=os.path.abspath(_SRC))
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", script, which, str(n_shapes)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True,
+        )
+        for which in ("0", "1")
+    ]
+    for p in procs:
+        out, err = p.communicate(timeout=300)
+        assert p.returncode == 0, f"writer failed:\n{out}\n{err}"
+
+    # the file parses (never corrupt) ...
+    with open(path) as f:
+        raw = json.load(f)
+    assert isinstance(raw, dict)
+
+    # ... and holds EVERY key both writers produced (no lost updates)
+    expected = set()
+    for t in range(n_shapes):
+        spec = matmul_spec(128 * (t + 1), 128, 128)
+        expected.add(plan_key(spec, np.float32))
+        for d in derived_specs(spec).values():
+            expected.add(plan_key(d, np.float32))
+    missing = expected - set(raw)
+    assert not missing, (
+        f"{len(missing)}/{len(expected)} plan entries lost to concurrent "
+        f"writers — the read-merge-write in AutotuneCache.put is racing"
+    )
+
+    # the surviving entries round-trip through the ops-facing lookup
+    db = PlanDB(path)
+    spec = matmul_spec(128, 128, 128)
+    for s in (spec, *derived_specs(spec).values()):
+        assert db.best_schedule(s, np.float32) is not None
+
+
+def test_lock_file_is_reused_not_leaked(tmp_path):
+    """put() creates one sibling .lock file and keeps using it."""
+    path = str(tmp_path / "plans.json")
+    db = PlanDB(path)
+    from repro.codegen import default_schedule
+    from repro.search.plandb import entry_from
+
+    for m in (128, 256):
+        spec = matmul_spec(m, 128, 128)
+        db.put(
+            spec, np.float32,
+            [entry_from(default_schedule(spec), score=1.0,
+                        lower_bound=0.0, fits_vmem=True)],
+        )
+    siblings = sorted(os.listdir(tmp_path))
+    assert siblings == ["plans.json", "plans.json.lock"]

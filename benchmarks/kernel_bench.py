@@ -14,7 +14,10 @@ report how much of the variant space the analytic early-cut removed before
 measurement.  The ``grad.*`` rows exercise the training half
 (``repro.grad``): forward + backward through the custom_vjp ops, the
 epilogue-aware dense_act backward, and the backward GEMMs picking up
-searched plans under their derived-spec keys.  ``--smoke`` (or
+searched plans under their derived-spec keys.  The ``capture.*`` rows
+cover whole-model capture (``repro.capture``): per demo config, sites
+harvested/dispatched/fallback, plus the jitted captured-vs-uncaptured
+step-time ratio (the no-op safety bar).  ``--smoke`` (or
 ``run(smoke=True)``) keeps shapes tiny for CI.
 
 Rows that do arithmetic carry ``flops=`` in the derived column so
@@ -311,6 +314,73 @@ def _bench_grad_plandb(smoke: bool):
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+@guarded("capture.sites")
+def _bench_capture_sites(smoke: bool):
+    """Whole-model capture accounting per demo config (repro.capture).
+
+    Abstract harvest (ShapeDtypeStruct trace — no params allocated, no
+    kernels run): one row per config counting dot_general sites
+    harvested / dispatched / fallback, the ISSUE-4 acceptance counters.
+    The reported time is the trace+harvest cost itself.
+    """
+    import time as _time
+
+    from repro import capture
+
+    for name, cfg in sorted(capture.demo_configs().items()):
+        t0 = _time.perf_counter()
+        _, rep = capture.model_capture(
+            cfg, batch=capture.DEMO_BATCH, seq=capture.DEMO_SEQ,
+            kind="train", interpret=True,
+        )
+        t = _time.perf_counter() - t0
+        emit(
+            f"capture.sites.{name}", t,
+            f"harvested={rep.harvested};dispatched={rep.dispatched};"
+            f"fallback={rep.fallback}",
+        )
+
+
+@guarded("capture.step")
+def _bench_capture_step(smoke: bool):
+    """End-to-end jitted train-loss step: captured vs uncaptured.
+
+    interpret=False on CPU means every site falls back, so the two jitted
+    programs are semantically identical — the row measures the capture
+    replay's compile-through overhead, which must stay ~1x (the no-op
+    safety bar for turning ``--capture`` on in production).  Dispatch
+    counters live in the ``capture.sites.*`` rows above.
+    """
+    import jax
+
+    from repro import capture
+    from repro.models.api import get_api
+
+    cfg = capture.demo_configs()["dense"]
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.key(0))
+    B, S = capture.DEMO_BATCH, capture.DEMO_SEQ
+    toks = jnp.zeros((B, S), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+
+    def loss(p, b):
+        return api.loss(p, cfg, b)
+
+    captured = capture.optimize(loss, interpret=False)
+    base_fn = jax.jit(loss)
+    cap_fn = jax.jit(captured)
+    base_s = timeit(lambda: float(base_fn(params, batch)), repeats=2)
+    cap_s = timeit(lambda: float(cap_fn(params, batch)), repeats=2)
+    err = abs(
+        float(cap_fn(params, batch)) - float(base_fn(params, batch))
+    )
+    emit(
+        "capture.step", cap_s,
+        f"max_err={err:.2e};baseline_s={base_s:.3g};"
+        f"ratio={cap_s / max(base_s, 1e-12):.3g}",
+    )
+
+
 def run(smoke: bool = False):
     m = n = k = 4096
     cands = [
@@ -352,6 +422,8 @@ def run(smoke: bool = False):
     _bench_grad_dense(smoke)
     _bench_grad_dense_act(smoke)
     _bench_grad_plandb(smoke)
+    _bench_capture_sites(smoke)
+    _bench_capture_step(smoke)
 
 
 if __name__ == "__main__":

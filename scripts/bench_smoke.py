@@ -13,7 +13,9 @@ non-zero if ANY row failed:
   * the searched schedule measured slower than ``default_schedule``
     (``search.vs_default`` must report ``not_slower=True``),
   * the backward GEMMs failed to pick up searched plans by derived-spec
-    key (``grad.plandb`` must report ``ok=True``).
+    key (``grad.plandb`` must report ``ok=True``),
+  * whole-model capture dispatched zero sites on any demo config
+    (``capture.sites.*`` must report ``dispatched>=1``).
 
 On success (and only then) the parsed rows are written to
 ``BENCH_pr3.json`` at the repo root — per-row seconds, GFLOP/s (from the
@@ -46,6 +48,10 @@ REQUIRED = [
     "grad.dense.bwd",
     "grad.dense_act.bwd",
     "grad.plandb",
+    "capture.sites.dense",
+    "capture.sites.moe",
+    "capture.sites.ssm",
+    "capture.step",
 ]
 
 
@@ -67,6 +73,12 @@ def check_row(name: str, derived: str) -> str:
         return "searched schedule slower than default_schedule"
     if name == "grad.plandb" and "ok=True" not in derived:
         return "backward GEMMs did not hit searched plans by derived key"
+    if name.startswith("capture.sites."):
+        m = re.search(r"dispatched=(\d+)", derived)
+        if not m:
+            return "capture row missing dispatched= counter"
+        if int(m.group(1)) < 1:
+            return "whole-model capture dispatched zero sites"
     return ""
 
 

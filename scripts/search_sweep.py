@@ -14,6 +14,11 @@ Examples:
       --shapes "256,256,256;512,512,512" --no-measure   # analytic only
   python scripts/search_sweep.py --spec matmul --shapes 512,512,512 \
       --interpret --with-grads   # also sweep the derived dA/dB specs
+  python scripts/search_sweep.py --from-model qwen3-8b --model-smoke \
+      --model-batch 2 --model-seq 64 --interpret --with-grads
+      # whole-model sweep: harvest the config's full GEMM set via
+      # repro.capture (train+prefill+decode, abstract trace — no
+      # allocation) and sweep every harvested spec, fwd+bwd, in one pass
 
 Exit code is non-zero if any sweep point fails to produce a plan or the
 persisted winner does not round-trip.
@@ -41,18 +46,42 @@ def main() -> int:
         description="cost-guided variant search sweep"
     )
     ap.add_argument(
-        "--spec", default="matmul",
+        "--spec", default=None,
         help="spec family (matmul, matvec, weighted_matmul, "
-             "batched_matmul, chain_matmul, transposed_matmul)",
+             "batched_matmul, chain_matmul, transposed_matmul); "
+             "default matmul.  Incompatible with --from-model, which "
+             "harvests its own specs",
     )
     ap.add_argument(
-        "--shapes", required=True,
-        help="semicolon-separated extent tuples, e.g. '512,512,512'",
+        "--shapes", default=None,
+        help="semicolon-separated extent tuples, e.g. '512,512,512' "
+             "(required unless --from-model)",
+    )
+    ap.add_argument(
+        "--from-model", default=None, metavar="ARCH",
+        help="harvest the sweep points from a model config instead of "
+             "--spec/--shapes: repro.capture traces the arch's train, "
+             "prefill and decode entry points abstractly and collects "
+             "every dispatched dot_general site's ContractionSpec",
+    )
+    ap.add_argument("--model-smoke", action="store_true",
+                    help="with --from-model, use the reduced smoke config")
+    ap.add_argument("--model-batch", type=int, default=2,
+                    help="batch size for the --from-model trace")
+    ap.add_argument("--model-seq", type=int, default=64,
+                    help="sequence length for the --from-model trace")
+    ap.add_argument(
+        "--model-kinds", default="train,prefill,decode",
+        help="comma-separated trace points for --from-model",
     )
     ap.add_argument("--beam", type=int, default=8, help="beam width")
     ap.add_argument("--topk", type=int, default=4,
                     help="survivors lowered + measured")
-    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--dtype", default=None,
+                    help="sweep dtype (default float32).  Incompatible "
+                         "with --from-model, which sweeps under the "
+                         "model's own activation dtype so plan keys "
+                         "match run-time lookups")
     ap.add_argument("--interpret", action="store_true",
                     help="measure via the Pallas interpreter (CPU)")
     ap.add_argument("--no-measure", action="store_true",
@@ -80,29 +109,76 @@ def main() -> int:
     )
 
     db = PlanDB(args.plan_db) if args.plan_db else default_plan_db()
-    shapes = [
-        tuple(int(x) for x in part.split(","))
-        for part in args.shapes.split(";")
-        if part.strip()
-    ]
-    if not shapes:
-        ap.error("--shapes is empty")
 
     points = []
-    for shape in shapes:
-        root = spec_from_name(args.spec, shape)
-        points.extend(
-            (label, spec, shape)
-            for label, spec in sweep_specs(root, with_grads=args.with_grads)
+    if args.from_model:
+        # harvested points carry their own specs and dtypes; a user also
+        # passing --spec/--dtype/--shapes would silently get something
+        # else than they asked for, so refuse loudly
+        for flag, val in (("--spec", args.spec), ("--dtype", args.dtype),
+                          ("--shapes", args.shapes)):
+            if val is not None:
+                ap.error(f"{flag} cannot be combined with --from-model "
+                         f"(the harvest determines specs and dtypes)")
+        from repro.capture import model_gemm_specs
+        from repro.configs import get_config
+
+        cfg = get_config(args.from_model)
+        if args.model_smoke:
+            cfg = cfg.smoke()
+        kinds = tuple(
+            k.strip() for k in args.model_kinds.split(",") if k.strip()
         )
+        harvested = model_gemm_specs(
+            cfg, batch=args.model_batch, seq=args.model_seq,
+            kinds=kinds, interpret=True,
+        )
+        if not harvested:
+            print(f"--from-model {args.from_model}: no dispatchable "
+                  f"GEMM sites harvested")
+            return 1
+        for hlabel, spec, dtype in harvested:
+            shape = tuple(spec.extents[i] for i in spec.indices)
+            # sweep under the model's own activation dtype so the plan
+            # keys match the lookups ops performs at run time
+            points.extend(
+                (f"{hlabel}/{label}", sub, shape, dtype)
+                for label, sub in sweep_specs(
+                    spec, with_grads=args.with_grads
+                )
+            )
+        spec_name = f"{args.from_model}(captured)"
+    else:
+        if args.spec is None:
+            args.spec = "matmul"
+        if args.dtype is None:
+            args.dtype = "float32"
+        if not args.shapes:
+            ap.error("--shapes is required unless --from-model is given")
+        shapes = [
+            tuple(int(x) for x in part.split(","))
+            for part in args.shapes.split(";")
+            if part.strip()
+        ]
+        if not shapes:
+            ap.error("--shapes is empty")
+        for shape in shapes:
+            root = spec_from_name(args.spec, shape)
+            points.extend(
+                (label, spec, shape, args.dtype)
+                for label, spec in sweep_specs(
+                    root, with_grads=args.with_grads
+                )
+            )
+        spec_name = args.spec
 
     failures = 0
-    for label, spec, shape in points:
-        print(f"== {args.spec} {'x'.join(map(str, shape))} [{label}] "
-              f"(beam={args.beam}, topk={args.topk}, dtype={args.dtype}) ==")
+    for label, spec, shape, dtype in points:
+        print(f"== {spec_name} {'x'.join(map(str, shape))} [{label}] "
+              f"(beam={args.beam}, topk={args.topk}, dtype={dtype}) ==")
         res = search_schedule(
             spec,
-            dtype=np.dtype(args.dtype),
+            dtype=np.dtype(dtype),
             beam_width=args.beam,
             topk=args.topk,
             measure=not args.no_measure,
@@ -131,7 +207,7 @@ def main() -> int:
         # winner we just stored
         from repro.codegen.cache import schedule_to_dict
 
-        stored = db.best_schedule(spec, np.dtype(args.dtype))
+        stored = db.best_schedule(spec, np.dtype(dtype))
         if stored is None or (
             json.dumps(schedule_to_dict(stored), sort_keys=True)
             != json.dumps(schedule_to_dict(res.best.schedule), sort_keys=True)

@@ -1,0 +1,332 @@
+"""Jaxpr-level GEMM harvest: every ``dot_general`` becomes a ContractionSpec.
+
+The model zoo (``repro.models``) lowers its matmuls through ``jnp.dot`` /
+``jnp.einsum``, i.e. through the ``dot_general`` primitive — not through
+``repro.ops`` — so before this module only hand-rewired call sites owned
+plan-DB/autotune keys.  ``harvest_jaxpr`` walks a traced function (recursing
+into ``pjit``/``scan``/``remat``/``cond``/``while``/``custom_*`` sub-jaxprs),
+classifies each ``dot_general`` equation against the spec families of
+``core.enumerate`` (the single home of contraction naming, so every harvested
+site owns the same plan-DB and autotune-cache keys a hand-rewired ``ops``
+call would), and reports per site whether the capture rewriter
+(``capture.rewrite``) can dispatch it through the generated-kernel pipeline
+or must leave it untouched — with the reason.
+
+Classification is the *single source of truth* shared with the rewriter:
+``classify_dot_general`` decides, ``rewrite`` obeys.  Eligibility reuses the
+``repro.ops`` kernel-dispatch predicates verbatim, so a site is dispatched
+exactly when the equivalent ``ops`` entry point would run a generated kernel
+for those shapes on this backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+from jax import core as jcore
+
+from ..core.enumerate import (
+    ContractionSpec,
+    batched_matmul_spec,
+    matmul_spec,
+    transposed_matmul_spec,
+)
+
+#: dtypes the generated-kernel pipeline stores/accumulates correctly
+SUPPORTED_DTYPES = ("float32", "bfloat16")
+
+#: sub-jaxpr-carrying primitives the rewriter knows how to re-emit; sites
+#: inside any *other* jaxpr-carrying primitive are fallback by containment
+REWRITABLE_HOPS = frozenset({
+    "pjit", "closed_call", "core_call",
+    "scan", "while", "cond",
+    "remat", "remat2", "checkpoint",
+    "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr",
+})
+
+
+@dataclasses.dataclass
+class CaptureSite:
+    """One ``dot_general`` equation of the traced function."""
+
+    site_id: int
+    path: str                  # eqn trail, e.g. "scan/remat2/eqn12"
+    lhs_shape: Tuple[int, ...]
+    rhs_shape: Tuple[int, ...]
+    out_shape: Tuple[int, ...]
+    dtype: str
+    out_dtype: str
+    dimension_numbers: Any
+    op: Optional[str] = None           # dense | dense_transposed | batched_dense
+    spec: Optional[ContractionSpec] = None
+    status: str = "fallback"           # dispatched | fallback
+    reason: str = ""                   # why a fallback site fell back
+
+    @property
+    def dispatched(self) -> bool:
+        return self.status == "dispatched"
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "site_id": self.site_id,
+            "path": self.path,
+            "lhs_shape": list(self.lhs_shape),
+            "rhs_shape": list(self.rhs_shape),
+            "out_shape": list(self.out_shape),
+            "dtype": self.dtype,
+            "out_dtype": self.out_dtype,
+            "op": self.op,
+            "spec": None if self.spec is None else self.spec.name,
+            "extents": None if self.spec is None else dict(self.spec.extents),
+            "status": self.status,
+            "reason": self.reason,
+        }
+
+
+def spec_key(spec: ContractionSpec, dtype: str) -> Tuple:
+    """Plan-key granularity for deduplicating harvested GEMM sites — the
+    single home of this tuple (report dedup, model sweeps, serve warmup
+    all key on it)."""
+    return (spec.name, tuple(sorted(spec.extents.items())), str(dtype))
+
+
+@dataclasses.dataclass
+class CaptureReport:
+    """Per-site accounting for one captured function."""
+
+    label: str = ""
+    sites: List[CaptureSite] = dataclasses.field(default_factory=list)
+
+    @property
+    def harvested(self) -> int:
+        return len(self.sites)
+
+    @property
+    def dispatched(self) -> int:
+        return sum(1 for s in self.sites if s.dispatched)
+
+    @property
+    def fallback(self) -> int:
+        return self.harvested - self.dispatched
+
+    def dispatched_sites(self) -> List[CaptureSite]:
+        return [s for s in self.sites if s.dispatched]
+
+    def unique_specs(self) -> List[Tuple[ContractionSpec, str]]:
+        """Deduplicated (spec, dtype) pairs of the dispatched sites — the
+        sweepable GEMM set of this function (plan-DB key granularity)."""
+        seen: Dict[Tuple, Tuple[ContractionSpec, str]] = {}
+        for s in self.sites:
+            if s.spec is None or not s.dispatched:
+                continue
+            seen.setdefault(spec_key(s.spec, s.dtype), (s.spec, s.dtype))
+        return list(seen.values())
+
+    def summary(self) -> str:
+        return (
+            f"capture[{self.label or '?'}]: {self.harvested} site(s) "
+            f"harvested, {self.dispatched} dispatched, "
+            f"{self.fallback} fallback"
+        )
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "label": self.label,
+            "harvested": self.harvested,
+            "dispatched": self.dispatched,
+            "fallback": self.fallback,
+            "sites": [s.as_dict() for s in self.sites],
+        }
+
+    def to_json(self, **kwargs) -> str:
+        kwargs.setdefault("indent", 2)
+        kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.as_dict(), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# classification — shared with capture.rewrite
+# ---------------------------------------------------------------------------
+
+
+class _Shaped:
+    """Minimal shape/ndim carrier for the ops dispatch predicates."""
+
+    __slots__ = ("shape", "ndim")
+
+    def __init__(self, shape):
+        self.shape = tuple(shape)
+        self.ndim = len(self.shape)
+
+
+def classify_dot_general(
+    lhs_aval, rhs_aval, out_aval, params: Dict[str, Any], *,
+    interpret: bool, site_id: int = 0, path: str = "",
+) -> CaptureSite:
+    """Map one ``dot_general`` equation to a ContractionSpec + dispatch verdict.
+
+    Eligible layouts (everything else falls back untouched):
+
+      * ``(..., M, D) @ (D, F)`` contracting the last lhs axis with the
+        first rhs axis, no batch dims -> ``matmul`` (leading lhs axes are
+        flattened into M, exactly what the models' reshape-then-dense
+        call sites do by hand);
+      * ``(D, M) @ (D, F)`` contracting axis 0 with axis 0 ->
+        ``transposed_matmul`` (the weight-gradient layout);
+      * ``(B, M, D) @ (B, D, F)`` batched on axis 0 -> ``batched_matmul``
+        (MoE expert FFNs, attention-free batched contractions).
+
+    The dispatch verdict then applies the exact ``repro.ops`` kernel
+    predicates, so "dispatched" means "the equivalent ops entry point runs
+    a generated kernel here" — alignment, backend and dtype included.
+    """
+    from .. import ops
+
+    (lc, rc), (lb, rb) = params["dimension_numbers"]
+    site = CaptureSite(
+        site_id=site_id,
+        path=path,
+        lhs_shape=tuple(lhs_aval.shape),
+        rhs_shape=tuple(rhs_aval.shape),
+        out_shape=tuple(out_aval.shape),
+        dtype=np.dtype(lhs_aval.dtype).name,
+        out_dtype=np.dtype(out_aval.dtype).name,
+        dimension_numbers=params["dimension_numbers"],
+    )
+
+    if np.dtype(lhs_aval.dtype) != np.dtype(rhs_aval.dtype):
+        site.reason = (
+            f"mixed operand dtypes {lhs_aval.dtype}/{rhs_aval.dtype}"
+        )
+        return site
+    if site.dtype not in SUPPORTED_DTYPES:
+        site.reason = f"unsupported dtype {site.dtype}"
+        return site
+
+    ln, rn = len(site.lhs_shape), len(site.rhs_shape)
+    lc, rc, lb, rb = tuple(lc), tuple(rc), tuple(lb), tuple(rb)
+
+    if not lb and rn == 2 and rc == (0,) and ln >= 2 and lc == (ln - 1,):
+        # (..., M, D) @ (D, F): the workhorse dense layout
+        d = site.lhs_shape[-1]
+        m = int(np.prod(site.lhs_shape[:-1], dtype=np.int64))
+        f = site.rhs_shape[1]
+        site.op = "dense"
+        site.spec = matmul_spec(m, d, f)
+        if ops._dense_kernel_ok(
+            _Shaped((m, d)), _Shaped((d, f)), interpret
+        ):
+            site.status = "dispatched"
+        else:
+            if not (ops._use_pallas() or interpret):
+                site.reason = "cpu backend without interpret mode"
+            else:
+                site.reason = (
+                    f"dense kernel needs 128-aligned (M,D,F)=({m},{d},{f})"
+                )
+        return site
+
+    if not lb and ln == 2 and rn == 2 and lc == (0,) and rc == (0,):
+        # (D, M) @ (D, F) -> (M, F): stored-transposed contraction
+        d, m = site.lhs_shape
+        f = site.rhs_shape[1]
+        site.op = "dense_transposed"
+        site.spec = transposed_matmul_spec(m, d, f)
+        if ops._generic_kernel_ok(interpret):
+            site.status = "dispatched"
+        else:
+            site.reason = "cpu backend without interpret mode"
+        return site
+
+    if (
+        lb == (0,) and rb == (0,) and ln == 3 and rn == 3
+        and lc == (2,) and rc == (1,)
+    ):
+        b, m, d = site.lhs_shape
+        f = site.rhs_shape[2]
+        site.op = "batched_dense"
+        site.spec = batched_matmul_spec(b, m, d, f)
+        if ops._batched_kernel_ok(
+            _Shaped((b, m, d)), _Shaped((b, d, f)), interpret
+        ):
+            site.status = "dispatched"
+        else:
+            site.reason = "cpu backend without interpret mode"
+        return site
+
+    site.reason = (
+        f"unsupported contraction layout ndim=({ln},{rn}) "
+        f"contract=({lc},{rc}) batch=({lb},{rb})"
+    )
+    return site
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walk
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[str, jcore.Jaxpr]]:
+    """All jaxprs carried in an equation's params (generic, any primitive)."""
+    out: List[Tuple[str, jcore.Jaxpr]] = []
+    for name, val in eqn.params.items():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if isinstance(v, jcore.ClosedJaxpr):
+                out.append((name, v.jaxpr))
+            elif isinstance(v, jcore.Jaxpr):
+                out.append((name, v))
+    return out
+
+
+def harvest_jaxpr(
+    closed: jcore.ClosedJaxpr, *, interpret: bool, label: str = "",
+) -> CaptureReport:
+    """Walk a traced function and classify every ``dot_general`` site.
+
+    Recurses into all jaxpr-carrying params.  Sites nested inside a
+    higher-order primitive the rewriter cannot re-emit (anything outside
+    ``REWRITABLE_HOPS``) are forced to fallback with the containing
+    primitive named in the reason — the report never over-promises what
+    ``capture.optimize`` will actually dispatch.
+    """
+    report = CaptureReport(label=label)
+
+    def walk(
+        jaxpr: jcore.Jaxpr, trail: Tuple[str, ...],
+        blocked_by: Optional[str],
+    ):
+        for i, eqn in enumerate(jaxpr.eqns):
+            name = eqn.primitive.name
+            if name == "dot_general":
+                site = classify_dot_general(
+                    eqn.invars[0].aval, eqn.invars[1].aval,
+                    eqn.outvars[0].aval, eqn.params,
+                    interpret=interpret,
+                    site_id=len(report.sites),
+                    path="/".join(trail + (f"eqn{i}",)),
+                )
+                if site.dispatched and blocked_by is not None:
+                    site.status = "fallback"
+                    site.reason = (
+                        "inside a higher-order primitive the rewriter "
+                        f"does not re-emit ({blocked_by})"
+                    )
+                report.sites.append(site)
+                continue
+            subs = _sub_jaxprs(eqn)
+            if subs:
+                # the first non-rewritable ancestor blocks everything
+                # below it; keep naming *that* primitive, not nearer
+                # (rewritable) ancestors
+                block = blocked_by if blocked_by is not None else (
+                    None if name in REWRITABLE_HOPS else name
+                )
+                for _, sub in subs:
+                    walk(sub, trail + (name,), block)
+
+    walk(closed.jaxpr, (), None)
+    return report

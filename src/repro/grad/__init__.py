@@ -30,6 +30,7 @@ from .vjp import (
     dense_act_vjp,
     dense_transposed_vjp,
     dense_vjp,
+    weighted_dense_vjp,
 )
 
 __all__ = [
@@ -42,4 +43,5 @@ __all__ = [
     "dense_vjp",
     "derived_spec",
     "derived_specs",
+    "weighted_dense_vjp",
 ]

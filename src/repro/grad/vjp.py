@@ -163,6 +163,44 @@ def batched_dense_vjp(out_dtype: str, interpret: bool):
 
 
 @functools.lru_cache(maxsize=None)
+def weighted_dense_vjp(out_dtype: str, interpret: bool):
+    """sum_j x_ij w_jk g_j with every cotangent a derived-spec contraction.
+
+    dg is the interesting one: a three-operand contraction over (i, k)
+    producing a vector — derived mechanically like every other backward
+    spec, and swept/tuned under its own ``weighted_matmul.dg`` key.
+    """
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w, g):
+        from .. import ops
+
+        return ops._weighted_dense_raw(x, w, g, out_dt, interpret)
+
+    def fwd(x, w, g):
+        return f(x, w, g), (x, w, g)
+
+    def bwd(res, grad_out):
+        from .. import ops
+        from ..core.enumerate import weighted_matmul_spec
+
+        x, w, g = res
+        m, d = x.shape
+        _, fdim = w.shape
+        spec = weighted_matmul_spec(m, d, fdim)
+        cots = _cotangent_gemms(
+            spec, grad_out, {"A": x, "B": w, "g": g},
+            interpret=interpret,
+            use_kernel=ops._weighted_kernel_ok(x, interpret),
+        )
+        return cots["A"], cots["B"], cots["g"]
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
 def chain_dense_vjp(out_dtype: str, interpret: bool):
     out_dt = np.dtype(out_dtype)
 

@@ -38,12 +38,47 @@ class BatchServer:
 
     def __init__(self, cfg, *, batch_size: int, max_len: int,
                  extra_batch=None, warm_gemms=(), search_gemms=(),
-                 search_grads: bool = True):
+                 search_grads: bool = True, capture: bool = False):
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
         self.extra_batch = extra_batch or {}
+        # Whole-model capture: harvest the prefill + decode GEMM sets
+        # (abstract trace — no allocation), sweep every harvested spec
+        # into the ranked plan DB (fwd, plus derived bwd specs unless
+        # --no-search-grads so a co-located training fleet benefits from
+        # the same warmup), and route serving steps through
+        # capture.optimize so the eligible sites dispatch.
+        self.capture = capture
+        if capture:
+            from .. import capture as _capture
+            from ..search import default_plan_db
+
+            # One abstract trace per serving entry point covers the
+            # report, the sweepable spec set AND the summary.
+            # interpret=True classifies eligibility as if kernels can run
+            # (what a TPU replica dispatches); the measurement below still
+            # uses the interpreter only where there is no TPU.
+            points = {}
+            for kind in ("prefill", "decode"):
+                _, rep = _capture.model_capture(
+                    cfg, batch=batch_size, seq=max_len, kind=kind,
+                    interpret=True,
+                )
+                print(f"[serve] {rep.summary()}")
+                for spec, dt in rep.unique_specs():
+                    points.setdefault(
+                        _capture.spec_key(spec, dt),
+                        (f"{kind}:{spec.name}", spec, dt),
+                    )
+            db = default_plan_db()
+            n = _capture.sweep_captured(
+                list(points.values()), with_grads=search_grads, plan_db=db,
+                interpret=jax.default_backend() != "tpu",
+            )
+            print(f"[serve] capture swept {n} plan point(s) "
+                  f"({len(points)} unique GEMM spec(s)) -> {db.path}")
         # Serving replicas reuse the fleet's tuned kernel schedules: warm
         # the persistent codegen cache before the first request arrives.
         if warm_gemms:
@@ -83,15 +118,27 @@ class BatchServer:
             print(f"[serve] searched {n} GEMM plan(s) "
                   f"({what}) -> {db.path}")
         self.params, _ = self.api.init(cfg, jax.random.key(0))
-        self._decode = jax.jit(
-            lambda p, c, t: self.api.decode_step(p, self.cfg, c, t)
+        decode_fn = lambda p, c, t: self.api.decode_step(  # noqa: E731
+            p, self.cfg, c, t
         )
+        prefill_fn = lambda p, b: self.api.prefill(  # noqa: E731
+            p, self.cfg, b, self.max_len
+        )
+        if self.capture:
+            from .. import capture as _capture
+
+            decode_fn = _capture.optimize(
+                decode_fn, label=f"{cfg.arch_id}:decode"
+            )
+            prefill_fn = _capture.optimize(
+                prefill_fn, label=f"{cfg.arch_id}:prefill"
+            )
+        self._decode = jax.jit(decode_fn)
+        self._prefill_fn = prefill_fn
 
     def _prefill(self, tokens: np.ndarray):
         batch = {"tokens": jnp.asarray(tokens), **self.extra_batch}
-        return self.api.prefill(
-            self.params, self.cfg, batch, self.max_len
-        )
+        return self._prefill_fn(self.params, batch)
 
     def run(self, requests: List[Request], greedy: bool = True):
         assert len(requests) <= self.batch_size
@@ -151,8 +198,17 @@ def main():
     )
     ap.add_argument(
         "--no-search-grads", action="store_true",
-        help="with --search-gemms, sweep only the forward specs "
-             "(inference-only replicas skip the backward-plan cost)",
+        help="with --search-gemms/--capture, sweep only the forward "
+             "specs (inference-only replicas skip the backward-plan "
+             "cost)",
+    )
+    ap.add_argument(
+        "--capture", action="store_true",
+        help="whole-model capture (repro.capture): harvest the prefill "
+             "+ decode GEMM sets, sweep every harvested spec into the "
+             "ranked plan DB, and serve through the captured steps so "
+             "eligible dot_general sites dispatch through generated "
+             "kernels",
     )
     args = ap.parse_args()
 
@@ -192,6 +248,7 @@ def main():
         warm_gemms=warm,
         search_gemms=search,
         search_grads=not args.no_search_grads,
+        capture=args.capture,
     )
     stats = server.run(reqs)
     print(

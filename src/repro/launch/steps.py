@@ -107,6 +107,7 @@ def make_train_step(
     opt_cfg: AdamWConfig,
     lr_schedule: Optional[Callable] = None,
     microbatch: int = 1,
+    capture: Optional[bool] = None,
 ):
     """Loss + grad + optimizer update for one (micro)batch.
 
@@ -116,12 +117,31 @@ def make_train_step(
     (dA = g·Bᵀ, dB = Aᵀ·g) compile under their own derived-spec keys —
     the backward pass is generated-kernel traffic, not a dot_general
     fallback.
+
+    ``capture`` (or ``$REPRO_CAPTURE=1``) additionally routes the loss
+    through ``repro.capture.optimize``: the model's *remaining* plain
+    ``dot_general`` sites — everything not already a ``repro.ops`` call —
+    are harvested into ContractionSpecs and, where eligible, dispatched
+    through the same plan-DB pipeline, fwd and bwd.  Ineligible sites run
+    untouched, so this is a strict superset of the uncaptured step.
     """
+    import os
+
     api = get_api(cfg)
+    if capture is None:
+        capture = os.environ.get("REPRO_CAPTURE", "") == "1"
+    base_loss = lambda p, b: api.loss(p, cfg, b)  # noqa: E731
+    if capture:
+        from .. import capture as _capture
+
+        loss_inner = _capture.optimize(
+            base_loss, label=f"{cfg.arch_id}:train_step"
+        )
+    else:
+        loss_inner = base_loss
 
     def train_step(params, opt_state, batch):
-        def loss_fn(p, b):
-            return api.loss(p, cfg, b)
+        loss_fn = loss_inner
 
         if microbatch > 1:
             def split(x):
@@ -166,6 +186,7 @@ def train_bundle(
     shape: ShapeConfig,
     opt_cfg: Optional[AdamWConfig] = None,
     microbatch: int = 1,
+    capture: Optional[bool] = None,
 ) -> StepBundle:
     api = get_api(cfg)
     if opt_cfg is None:
@@ -189,7 +210,8 @@ def train_bundle(
         lambda s, sh: _sds(s.shape, s.dtype, sh), o_shapes, o_shard
     )
 
-    step = make_train_step(cfg, opt_cfg, microbatch=microbatch)
+    step = make_train_step(cfg, opt_cfg, microbatch=microbatch,
+                           capture=capture)
     metrics_shard = {
         "grad_norm": NamedSharding(mesh, P()),
         "clip_scale": NamedSharding(mesh, P()),

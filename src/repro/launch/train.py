@@ -46,6 +46,10 @@ class TrainRun:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     log_every: int = 10
+    #: route the loss through repro.capture.optimize so the model's plain
+    #: dot_general GEMMs dispatch through the plan-DB pipeline (fwd+bwd);
+    #: None = read $REPRO_CAPTURE
+    capture: Optional[bool] = None
 
 
 def train(run: TrainRun, params=None, verbose: bool = True):
@@ -57,7 +61,9 @@ def train(run: TrainRun, params=None, verbose: bool = True):
     schedule = warmup_cosine(
         warmup=min(100, run.steps // 10 + 1), total=run.steps
     )
-    step_fn = jax.jit(make_train_step(cfg, run.opt_cfg, lr_schedule=schedule))
+    step_fn = jax.jit(make_train_step(
+        cfg, run.opt_cfg, lr_schedule=schedule, capture=run.capture
+    ))
 
     mgr = (
         ckpt.CheckpointManager(run.ckpt_dir, keep=3) if run.ckpt_dir else None
@@ -121,6 +127,11 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--moments", default="float32",
                     choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--capture", action="store_true",
+                    help="capture the whole model: harvest its plain "
+                         "dot_general GEMMs and dispatch the eligible "
+                         "ones through the plan-DB pipeline "
+                         "(repro.capture; also $REPRO_CAPTURE=1)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -134,6 +145,7 @@ def main():
         ),
         steps=args.steps,
         ckpt_dir=args.ckpt_dir,
+        capture=args.capture or None,
     )
     t0 = time.time()
     _, losses, report = train(run)

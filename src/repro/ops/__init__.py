@@ -16,8 +16,15 @@ these before ``codegen`` existed):
   ``batched_dense``   out[b,i,k] = sum_j x[b,i,j] w[b,j,k]
   ``chain_dense``     out[i,l]   = sum_jk a[i,j] b[j,k] c[k,l]
   ``dense_transposed``out[i,k]   = sum_j a[j,i] b[j,k]
+  ``weighted_dense``  out[i,k]   = sum_j x[i,j] w[j,k] g[j]  (paper eq 2;
+                      generated replacement for kernels/fused_rnz)
   ``dense_act``       epilogue-fused dense+bias+norm+activation
                       (the generated replacement for kernels/fused_dense_act)
+
+Whole-model entry: ``repro.capture.optimize(fn)`` harvests a traced
+function's plain ``dot_general`` sites and dispatches the eligible ones
+through these entry points — the predicates below (``_dense_kernel_ok``
+etc.) are the shared single source of truth for what "eligible" means.
 
 All entry points are **differentiable by default**: whenever the call
 would dispatch to a generated kernel, ``differentiable=True`` routes
@@ -167,16 +174,44 @@ def dense(x: jax.Array, w: jax.Array, out_dtype=None,
     return _dense_raw(x, w, out_dtype, interpret)
 
 
-def weighted_dense(x, w, g, out_dtype=None):
-    """sum_j x_.j w_jk g_j — paper eq 2, fused (kernel on TPU)."""
-    out_dtype = out_dtype or x.dtype
-    if _use_pallas() and x.ndim == 2:
-        from ..kernels.fused_rnz.ops import weighted_matmul
+def _weighted_kernel_ok(x, interpret: bool) -> bool:
+    return (_use_pallas() or interpret) and x.ndim == 2
 
-        return weighted_matmul(x, w, g).astype(out_dtype)
+
+def _weighted_dense_raw(x, w, g, out_dtype, interpret):
+    if _weighted_kernel_ok(x, interpret):
+        from ..core.enumerate import weighted_matmul_spec
+
+        m, d = x.shape
+        _, f = w.shape
+        kern = _tuned_kernel(
+            weighted_matmul_spec(m, d, f), x.dtype, interpret=interpret
+        )
+        return kern(x, w, g).astype(out_dtype)
     return jnp.dot(
         x * g[None, :], w, preferred_element_type=jnp.float32
     ).astype(out_dtype)
+
+
+def weighted_dense(x, w, g, out_dtype=None, interpret: bool = False,
+                   differentiable: bool = True):
+    """sum_j x_.j w_jk g_j — paper eq 2, through the generator.
+
+    Generated three-operand contraction (``weighted_matmul`` spec) with
+    its own plan-DB/autotune keys; the hand-written ``kernels/fused_rnz``
+    kernel remains as a verification baseline.  The backward dg spec is a
+    genuine three-operand contraction (dg[j] = sum_ik g_out[i,k] A[i,j]
+    B[j,k]) — a derived expression treated as a first-class mapping
+    problem, per Linnea/LAMP.
+    """
+    out_dtype = out_dtype or x.dtype
+    if differentiable and _weighted_kernel_ok(x, interpret):
+        from ..grad import weighted_dense_vjp
+
+        return weighted_dense_vjp(
+            _dt_name(out_dtype), bool(interpret)
+        )(x, w, g)
+    return _weighted_dense_raw(x, w, g, out_dtype, interpret)
 
 
 def _batched_dense_raw(x, w, out_dtype, interpret):

@@ -1,0 +1,244 @@
+"""Seeded fallback property-test engine, API-compatible with the slice of
+``hypothesis`` this suite uses.
+
+Installed into ``sys.modules`` as ``hypothesis`` by ``conftest.py`` when
+the real library is absent (the container bakes in jax/Pallas but not
+hypothesis, and tier-1 must not ``pip install``).  Unlike the old stub,
+which *skipped* every ``@given`` test, this engine actually **runs** them:
+each test executes ``max_examples`` times with values drawn from a PRNG
+seeded deterministically from the test's qualified name, so failures
+reproduce run-to-run and machine-to-machine.  CI installs real hypothesis
+and never touches this module (shrinking, the example database and
+adaptive generation are real-hypothesis-only features; this engine trades
+them for zero dependencies).
+
+Supported surface: ``given`` (positional + keyword strategies),
+``settings`` (``max_examples`` honored, rest accepted), ``assume``,
+``note``, ``example`` (no-op), ``HealthCheck``, and
+``strategies.integers / booleans / sampled_from / just / tuples /
+composite`` with ``.map`` / ``.filter``.
+
+``REPRO_PROPERTY_EXAMPLES`` caps per-test example counts (CI knob).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import types
+import zlib
+
+__is_repro_fallback__ = True
+
+
+class Unsatisfied(Exception):
+    """Raised by ``assume(False)`` / exhausted ``.filter`` — skips the example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise Unsatisfied
+    return True
+
+
+def note(*_a, **_k):
+    return None
+
+
+def example(*_a, **_k):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+class _HealthCheck:
+    def __getattr__(self, name):
+        return name
+
+
+HealthCheck = _HealthCheck()
+
+
+def settings(*_a, **kwargs):
+    """Decorator recording kwargs for ``given`` to read (max_examples)."""
+
+    def deco(fn):
+        fn._fallback_settings = dict(kwargs)
+        return fn
+
+    return deco
+
+
+settings.register_profile = lambda *a, **k: None
+settings.load_profile = lambda *a, **k: None
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(
+            lambda rng: f(self.draw(rng)), f"{self._label}.map"
+        )
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(200):
+                x = self.draw(rng)
+                if pred(x):
+                    return x
+            raise Unsatisfied
+
+        return SearchStrategy(draw, f"{self._label}.filter")
+
+    def __repr__(self):
+        return self._label
+
+
+def integers(min_value, max_value) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value},{max_value})",
+    )
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(seq) -> SearchStrategy:
+    items = list(seq)
+    if not items:
+        raise ValueError("sampled_from: empty sequence")
+    return SearchStrategy(lambda rng: rng.choice(items), "sampled_from(...)")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def tuples(*ss) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.draw(rng) for s in ss), "tuples(...)"
+    )
+
+
+def composite(fn):
+    """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_fn(rng):
+            def draw(strategy):
+                return strategy.draw(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_fn, f"composite:{fn.__name__}")
+
+    return factory
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = integers
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+strategies.just = just
+strategies.tuples = tuples
+strategies.composite = composite
+
+
+# ---------------------------------------------------------------------------
+# given
+# ---------------------------------------------------------------------------
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def given(*st_args, **st_kwargs):
+    """Run the test once per drawn example, deterministically seeded.
+
+    Positional strategies bind to the test's *last* positional parameters
+    (matching hypothesis), keyword strategies by name; remaining leading
+    parameters stay visible to pytest as fixtures.
+    """
+
+    def deco(fn):
+        cfg = getattr(fn, "_fallback_settings", {})
+        max_examples = int(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+        cap = int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "0") or 0)
+        if cap > 0:
+            max_examples = min(max_examples, cap)
+
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        bound = set(st_kwargs)
+        n_pos = len(st_args)
+        pos_names = [
+            p.name for p in params if p.name not in bound
+        ][-n_pos:] if n_pos else []
+        fixture_params = [
+            p for p in params
+            if p.name not in bound and p.name not in pos_names
+        ]
+        seed0 = zlib.adler32(
+            f"{fn.__module__}.{fn.__qualname__}".encode()
+        )
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            ran = 0
+            for i in range(max_examples):
+                rng = random.Random((seed0 * 100003 + i) & 0x7FFFFFFF)
+                try:
+                    drawn = {
+                        name: s.draw(rng)
+                        for name, s in zip(pos_names, st_args)
+                    }
+                    drawn.update(
+                        (name, s.draw(rng))
+                        for name, s in st_kwargs.items()
+                    )
+                except Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                    ran += 1
+                except Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"[fallback property engine] falsifying example "
+                        f"#{i} of {fn.__qualname__}: "
+                        f"{ {k: _short(v) for k, v in drawn.items()} } "
+                        f"-> {type(e).__name__}: {e}"
+                    ) from e
+            if ran == 0:
+                raise Unsatisfied(
+                    f"{fn.__qualname__}: no example satisfied assume()"
+                )
+
+        runner.__signature__ = sig.replace(parameters=fixture_params)
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+
+    return deco
+
+
+def _short(v, limit=80):
+    s = repr(v)
+    return s if len(s) <= limit else s[: limit - 3] + "..."

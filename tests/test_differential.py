@@ -45,6 +45,14 @@ from repro.search import (  # noqa: E402
     reference_arrays,
 )
 
+@pytest.fixture(autouse=True)
+def _isolated_caches(tmp_path, monkeypatch):
+    """The ops entry-point cases tune through the default plan-DB/autotune
+    pipeline; keep their files out of ~/.cache."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    monkeypatch.setenv("REPRO_PLAN_DB", str(tmp_path / "plans.json"))
+
+
 #: family -> (ctor, arity, seed offset).  Offsets keep streams disjoint and
 #: stable — never derive them from hash() (PYTHONHASHSEED would break repro).
 FAMILIES = {
@@ -174,6 +182,143 @@ def test_derived_backward_specs(family, seed):
             err_msg=f"derived spec {dspec.name} is not the cotangent "
                     f"of {family} wrt {wrt} (seed={seed})",
         )
+
+
+# ---------------------------------------------------------------------------
+# ops entry points the suite did not previously exercise:
+# weighted_dense and the dense_act epilogue matrix, kernel path vs
+# pure-jnp oracles
+# ---------------------------------------------------------------------------
+
+WD_SEEDS = tuple(range(6))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("seed", WD_SEEDS)
+def test_ops_weighted_dense_kernel_path(seed, dtype):
+    """ops.weighted_dense's generated-kernel path (interpret mode) against
+    the f64 einsum oracle, fwd + all three cotangents."""
+    from repro import ops
+
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(7000 + seed)
+    m, d, f = (int(rng.choice(EXTENT_POOL)) for _ in range(3))
+    x64 = rng.standard_normal((m, d))
+    w64 = rng.standard_normal((d, f))
+    g64 = rng.standard_normal(d)
+    x, w, g = (jnp.asarray(a, dt) for a in (x64, w64, g64))
+    # charge input quantization to the oracle, not the kernel
+    q = [np.asarray(a, np.float64) for a in (x, w, g)]
+    ref = np.einsum("ij,jk,j->ik", *q)
+
+    rtol, atol = TOL[np.dtype(dt)]
+    out = np.asarray(
+        ops.weighted_dense(x, w, g, interpret=True), np.float64
+    )
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(
+        out / scale, ref / scale, rtol=rtol, atol=atol,
+        err_msg=f"weighted_dense kernel path diverged (seed={seed})",
+    )
+
+    if dt == jnp.float32:
+        def loss_k(x_, w_, g_):
+            return jnp.sum(ops.weighted_dense(x_, w_, g_, interpret=True))
+
+        def loss_ref(x_, w_, g_):
+            return jnp.sum(jnp.einsum(
+                "ij,jk,j->ik", x_, w_, g_,
+                preferred_element_type=jnp.float32,
+            ))
+
+        got = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, g)
+        want = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, g)
+        for name, a, b in zip(("dx", "dw", "dg"), got, want):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float64), np.asarray(b, np.float64),
+                rtol=1e-3, atol=1e-3,
+                err_msg=f"weighted_dense cotangent {name} (seed={seed})",
+            )
+
+
+ACTS = ("relu", "gelu", "tanh", "silu", "id")
+EPSES = (1e-5, 1e-3)
+
+
+def _dense_act_oracle(x, w, beta, mean, var, act, eps):
+    """Pure-jnp reference for the fused epilogue, f32 accumulation."""
+    acc = jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y = acc + beta.astype(jnp.float32)[None, :]
+    z = (y - mean.astype(jnp.float32)[None, :]) * jax.lax.rsqrt(
+        var.astype(jnp.float32)[None, :] + eps
+    )
+    fns = {
+        "relu": lambda t: jnp.maximum(t, 0.0),
+        "gelu": jax.nn.gelu,
+        "tanh": jnp.tanh,
+        "silu": jax.nn.silu,
+        "id": lambda t: t,
+    }
+    return fns[act](z)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("eps", EPSES)
+@pytest.mark.parametrize("act", ACTS)
+def test_ops_dense_act_epilogue_matrix(act, eps, dtype):
+    """Every epilogue variant of ops.dense_act (act x eps x dtype) on the
+    generated-kernel path against an independent pure-jnp oracle."""
+    from repro import ops
+
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(
+        8000 + ACTS.index(act) * 10 + EPSES.index(eps)
+    )
+    m, d, f = 8, 6, 4
+    x = jnp.asarray(rng.standard_normal((m, d)), dt)
+    w = jnp.asarray(rng.standard_normal((d, f)), dt)
+    beta = jnp.asarray(rng.standard_normal(f), dt)
+    mean = jnp.asarray(rng.standard_normal(f) * 0.1, dt)
+    var = jnp.asarray(np.abs(rng.standard_normal(f)) + 0.5, dt)
+
+    ref = np.asarray(
+        _dense_act_oracle(x, w, beta, mean, var, act, eps), np.float64
+    )
+    out = np.asarray(
+        ops.dense_act(
+            x, w, beta, mean, var, act=act, eps=eps, interpret=True,
+        ),
+        np.float64,
+    )
+    rtol, atol = TOL[np.dtype(dt)]
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(
+        out / scale, ref / scale, rtol=rtol, atol=atol,
+        err_msg=f"dense_act({act}, eps={eps}, {dtype}) diverged",
+    )
+
+    if dt == jnp.float32:
+        got = jax.grad(
+            lambda *a: jnp.sum(ops.dense_act(
+                *a, act=act, eps=eps, interpret=True
+            )),
+            argnums=(0, 1, 2),
+        )(x, w, beta, mean, var)
+        want = jax.grad(
+            lambda *a: jnp.sum(_dense_act_oracle(*a, act, eps)),
+            argnums=(0, 1, 2),
+        )(x, w, beta, mean, var)
+        for name, a, b in zip(("dx", "dw", "dbeta"), got, want):
+            sc = max(float(jnp.max(jnp.abs(b))), 1.0)
+            np.testing.assert_allclose(
+                np.asarray(a, np.float64) / sc,
+                np.asarray(b, np.float64) / sc,
+                rtol=1e-3, atol=1e-3,
+                err_msg=f"dense_act({act}) cotangent {name}",
+            )
 
 
 @pytest.mark.parametrize("family", sorted(FAMILIES))

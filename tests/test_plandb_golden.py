@@ -1,0 +1,145 @@
+"""Golden regression: plan-DB on-disk format, derived-grad keys included.
+
+``tests/data/plan_db_golden.json`` is a committed snapshot of the ranked
+plan database ``search_schedule`` writes (PLAN_VERSION 1, hardware
+fingerprint pinned to ``golden/fixture-hw``), mirroring
+``tests/test_cache_golden.py`` for the PR-2/PR-3 formats.  It covers the
+forward ``matmul`` key (f32 + bf16) AND the derived backward keys
+``matmul.dA`` / ``matmul.dB`` (``grad.derive`` names), because training
+fleets share one plan DB for both sides of the tape:
+
+  * key derivation must keep producing the committed hex digests — a
+    silent drift would cold-start every fleet's searched plans (and
+    training's backward plans specifically, which no forward-only test
+    would catch);
+  * stored ranked entries must keep deserializing, validating and
+    round-tripping byte-identically;
+  * ``PlanDB.best_schedule`` (the exact lookup ``ops._tuned_kernel``
+    performs) must return the stored winner for every fixture key.
+
+Regenerate only after a deliberate format bump (``PLAN_VERSION``):
+
+    import numpy as np
+    import repro.codegen.cache as cache_mod
+    cache_mod.hardware_fingerprint = lambda: "golden/fixture-hw"
+    from repro.core.enumerate import matmul_spec
+    from repro.grad import derived_specs
+    from repro.search import PlanDB, search_schedule
+    db = PlanDB("tests/data/plan_db_golden.json")
+    fwd = matmul_spec(512, 512, 512); d = derived_specs(fwd)
+    for spec, dt in [(fwd, np.dtype(np.float32)),
+                     (fwd, np.dtype("bfloat16")),
+                     (d["A"], np.dtype(np.float32)),
+                     (d["B"], np.dtype(np.float32))]:
+        search_schedule(spec, dtype=dt, beam_width=4, topk=3,
+                        measure=False, plan_db=db, use_cached_plan=False)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import repro.codegen.cache as cache_mod
+from repro.codegen.cache import schedule_from_dict, schedule_to_dict
+from repro.core.enumerate import matmul_spec
+from repro.grad import derived_specs
+from repro.search import PlanDB
+from repro.search.plandb import PLAN_VERSION, grad_plan_keys, plan_key
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "data", "plan_db_golden.json"
+)
+GOLDEN_HW = "golden/fixture-hw"
+
+_FWD = matmul_spec(512, 512, 512)
+_D = derived_specs(_FWD)
+
+FIXTURE_POINTS = [
+    ("matmul-f32", _FWD, np.dtype(np.float32)),
+    ("matmul-bf16", _FWD, np.dtype("bfloat16")),
+    ("matmul.dA", _D["A"], np.dtype(np.float32)),
+    ("matmul.dB", _D["B"], np.dtype(np.float32)),
+]
+
+
+@pytest.fixture()
+def fixture_data():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_plan_version_is_pinned():
+    """Bumping PLAN_VERSION invalidates every key below — this test makes
+    sure the bump happens deliberately, fixture regenerated alongside."""
+    assert PLAN_VERSION == 1
+
+
+def test_fixture_is_wellformed(fixture_data):
+    assert len(fixture_data) == len(FIXTURE_POINTS)
+    for entry in fixture_data.values():
+        assert set(entry) >= {"v", "ranked", "stats"}
+        assert entry["v"] == PLAN_VERSION
+        assert entry["ranked"], "empty ranked ladder in fixture"
+        for rung in entry["ranked"]:
+            assert set(rung) >= {
+                "schedule", "score", "lower_bound", "fits_vmem",
+                "measured_s", "source",
+            }
+            assert set(rung["schedule"]) == {"splits", "levels"}
+
+
+@pytest.mark.parametrize(
+    "label,spec,dtype", FIXTURE_POINTS, ids=[p[0] for p in FIXTURE_POINTS],
+)
+def test_plan_key_derivation_is_stable(fixture_data, label, spec, dtype):
+    key = plan_key(spec, dtype, hardware=GOLDEN_HW)
+    assert key in fixture_data, (
+        f"plan-DB key for {label} drifted — every fleet's searched plans "
+        f"(backward included) would go cold on upgrade.  If deliberate, "
+        f"bump PLAN_VERSION and regenerate the fixture."
+    )
+
+
+def test_grad_plan_keys_match_derived_fixture_keys(fixture_data):
+    """grad_plan_keys (what the custom-VJP backward lookups use) must
+    address exactly the committed dA/dB entries."""
+    keys = grad_plan_keys(_FWD, np.float32, hardware=GOLDEN_HW)
+    assert set(keys) == {"A", "B"}
+    for wrt, key in keys.items():
+        assert key in fixture_data, f"derived key for d{wrt} drifted"
+    # and they are disjoint from the forward key
+    assert plan_key(_FWD, np.float32, hardware=GOLDEN_HW) not in keys.values()
+
+
+@pytest.mark.parametrize(
+    "label,spec,dtype", FIXTURE_POINTS, ids=[p[0] for p in FIXTURE_POINTS],
+)
+def test_ranked_schedules_roundtrip(fixture_data, label, spec, dtype):
+    entry = fixture_data[plan_key(spec, dtype, hardware=GOLDEN_HW)]
+    for rung in entry["ranked"]:
+        sched = schedule_from_dict(rung["schedule"], spec.root())
+        assert schedule_to_dict(sched) == rung["schedule"], label
+        sched.validate()
+
+
+def test_best_schedule_serves_golden_winner(tmp_path, monkeypatch):
+    """End to end: a fleet plan-DB file keeps serving its stored winners
+    through the exact lookup ops._tuned_kernel performs."""
+    monkeypatch.setattr(
+        cache_mod, "hardware_fingerprint", lambda: GOLDEN_HW
+    )
+    path = tmp_path / "plans.json"
+    shutil.copy(FIXTURE, path)
+    db = PlanDB(str(path))
+    with open(FIXTURE) as f:
+        data = json.load(f)
+    for label, spec, dtype in FIXTURE_POINTS:
+        sched = db.best_schedule(spec, dtype)
+        assert sched is not None, f"{label}: plan-DB lookup missed"
+        want = data[plan_key(spec, dtype, hardware=GOLDEN_HW)]
+        assert schedule_to_dict(sched) == want["ranked"][0]["schedule"], label

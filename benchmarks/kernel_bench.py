@@ -314,6 +314,143 @@ def _bench_grad_plandb(smoke: bool):
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def _mesh_shape_for_devices(n: int):
+    """Largest conventional (data, model) mesh the process can host."""
+    if n >= 8:
+        return (2, 4)
+    if n >= 4:
+        return (2, 2)
+    if n >= 2:
+        return (1, 2)
+    return None
+
+
+@guarded("mesh.search")
+def _bench_mesh_search(smoke: bool):
+    """The mesh (distributed) tier of the search, end to end.
+
+    Runs ``search_schedule`` with an active mesh shape over the forced
+    device mesh (the mesh-smoke CI job forces 8 CPU devices via
+    ``--xla_force_host_platform_device_count``), then reports:
+
+      * ``mesh.search``  — the sharded winner: measured over the real
+        mesh via ``codegen.bind_mesh``, differentially checked against
+        the einsum oracle in the same pass; ``ok`` requires a ``mesh:*``
+        plan in the ladder, measured, with a mesh-qualified DB key.
+      * ``mesh.vs_psum`` — searched-sharded vs the naive plain-psum
+        lowering of the same subdivision.  The naive baseline is part of
+        the measured set (``search_schedule``'s mesh-naive entry), so
+        ``not_slower`` holds by construction on this harness.
+
+    Sections emit nothing when the process has fewer than 2 devices —
+    the plain bench-smoke job runs single-device and only the mesh-smoke
+    job (``scripts/bench_smoke.py --mesh``) gates on these rows.
+    """
+    import tempfile
+
+    import jax
+
+    from repro.search import PlanDB, reference_arrays, search_schedule
+
+    shape = _mesh_shape_for_devices(jax.device_count())
+    if shape is None:
+        return
+    import shutil
+
+    s = 2 if smoke else 1
+    m = k = n = 128 // s
+    spec = matmul_spec(m, k, n)
+    arrays = reference_arrays(spec, seed=7)
+    tmp = tempfile.mkdtemp(prefix="repro-mesh-bench-")
+    try:
+        db = PlanDB(os.path.join(tmp, "plans.json"))
+        res = search_schedule(
+            spec, beam_width=6, topk=3, interpret=True, measure=True,
+            arrays=arrays, plan_db=db, mesh_shape=shape,
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    st = res.stats
+    win = res.best_sharded()
+    measured = win is not None and win.measured_s is not None
+    ok = (
+        measured
+        and res.db_key is not None
+        and res.mesh == "x".join(map(str, shape))
+    )
+    err = win.max_err if win is not None else float("nan")
+    emit(
+        "mesh.search",
+        win.measured_s if measured else 0.0,
+        f"ok={ok};mesh={res.mesh};max_err={err:.2e};"
+        f"candidates={st.considered};mesh_variants={st.mesh_variants};"
+        f"pruned={st.pruned_bound + st.pruned_beam};"
+        f"measured={st.measured};flops={spec.flops()}",
+    )
+    naive = res.mesh_baseline()
+    if naive is None or naive.measured_s is None or not measured:
+        # report the failure as a row rather than crash the section: the
+        # --mesh gate fails on ok=False with this diagnostic attached
+        emit(
+            "mesh.vs_psum", 0.0,
+            f"ok=False;not_slower=False;"
+            f"sharded_measured={measured};"
+            f"naive_measured={naive is not None and naive.measured_s is not None}",
+        )
+        return
+    emit(
+        "mesh.vs_psum", naive.measured_s,
+        f"ok=True;"
+        f"not_slower={win.measured_s <= naive.measured_s};"
+        f"sharded_s={win.measured_s:.3g};naive_s={naive.measured_s:.3g}",
+    )
+
+
+@guarded("mesh.ring")
+def _bench_mesh_ring(smoke: bool):
+    """Ring (ppermute) all-reduce vs lax.psum: equality + relative cost.
+
+    The ring strategy is what a searched plan with ``collective=ring``
+    lowers to (``codegen.collectives.ring_psum``); the row pins its
+    differential correctness against psum on an odd-sized payload (the
+    remainder-shard path) over the largest hostable device ring.
+    """
+    import jax
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.codegen.collectives import ring_psum
+    from repro.launch.mesh import make_debug_mesh
+
+    p = min(jax.device_count(), 8)
+    if p < 2:
+        return
+    mesh = make_debug_mesh((p,), ("data",))
+    rows = 3 if smoke else 5  # odd payload: exercises the padded shard
+    x = _rnd(p, rows, 33, seed=11)
+
+    def run_with(fn):
+        f = shard_map(
+            lambda xs: fn(xs[0]), mesh=mesh,
+            in_specs=P("data"), out_specs=P(), check_rep=False,
+        )
+        return f(x)
+
+    ring_s = timeit(lambda: np.asarray(run_with(
+        lambda v: ring_psum(v, "data"))), repeats=2)
+    psum_s = timeit(lambda: np.asarray(run_with(
+        lambda v: lax.psum(v, "data"))), repeats=2)
+    got = np.asarray(run_with(lambda v: ring_psum(v, "data")))
+    want = np.asarray(run_with(lambda v: lax.psum(v, "data")))
+    err = np.abs(got - want).max() / max(np.abs(want).max(), 1e-30)
+    emit(
+        "mesh.ring", ring_s,
+        f"ok={err < 1e-5};max_err={err:.2e};shards={p};"
+        f"psum_s={psum_s:.3g}",
+    )
+
+
 @guarded("capture.sites")
 def _bench_capture_sites(smoke: bool):
     """Whole-model capture accounting per demo config (repro.capture).
@@ -419,6 +556,8 @@ def run(smoke: bool = False):
 
     _bench_generated(smoke)
     _bench_search(smoke)
+    _bench_mesh_search(smoke)
+    _bench_mesh_ring(smoke)
     _bench_grad_dense(smoke)
     _bench_grad_dense_act(smoke)
     _bench_grad_plandb(smoke)

@@ -22,7 +22,17 @@ On success (and only then) the parsed rows are written to
 ``flops=`` fields kernel_bench emits) and max_err — the machine-readable
 perf trajectory later PRs diff against.
 
-Usage: python scripts/bench_smoke.py
+With ``--mesh`` the bench subprocess runs under a forced 8-device CPU mesh
+(``--xla_force_host_platform_device_count=8``) and the ``mesh.*`` rows
+become required: ``mesh.search`` and ``mesh.ring`` must report ``ok=True``
+and ``mesh.vs_psum`` must report ``not_slower=True`` — the searched
+sharded schedule is never slower than the naive plain-psum lowering of
+the same subdivision (structural: the naive baseline is part of the
+measured set).  This is the mesh-smoke CI job's entry point; the parsed
+rows then land in ``BENCH_mesh.json`` instead of the single-device
+baseline file.
+
+Usage: python scripts/bench_smoke.py [--mesh]
 """
 
 from __future__ import annotations
@@ -36,6 +46,7 @@ import sys
 
 TOL = 1e-3
 BENCH_JSON = "BENCH_pr3.json"
+BENCH_MESH_JSON = "BENCH_mesh.json"
 REQUIRED = [
     "kernel.gen.matmul",
     "kernel.gen.vs_handwritten",
@@ -52,6 +63,12 @@ REQUIRED = [
     "capture.sites.moe",
     "capture.sites.ssm",
     "capture.step",
+]
+#: required only under --mesh (the bench emits them only multi-device)
+REQUIRED_MESH = [
+    "mesh.search",
+    "mesh.vs_psum",
+    "mesh.ring",
 ]
 
 
@@ -73,6 +90,10 @@ def check_row(name: str, derived: str) -> str:
         return "searched schedule slower than default_schedule"
     if name == "grad.plandb" and "ok=True" not in derived:
         return "backward GEMMs did not hit searched plans by derived key"
+    if name.startswith("mesh.") and "ok=True" not in derived:
+        return "mesh row unhealthy (ok=True missing)"
+    if name == "mesh.vs_psum" and "not_slower=True" not in derived:
+        return "searched sharded schedule slower than naive psum lowering"
     if name.startswith("capture.sites."):
         m = re.search(r"dispatched=(\d+)", derived)
         if not m:
@@ -95,12 +116,15 @@ def _field(derived: str, key: str):
     return val if math.isfinite(val) else None
 
 
-def write_bench_json(repo: str, rows: dict) -> str:
-    """Persist the parsed rows as the PR's perf baseline (BENCH_pr3.json).
+def write_bench_json(repo: str, rows: dict, out_name: str = BENCH_JSON) -> str:
+    """Persist the parsed rows as the PR's perf baseline.
 
     ``rows`` maps name -> (seconds, derived).  GFLOP/s comes from the
     ``flops=`` field where a row carries one; rows without arithmetic
-    (plan-DB bookkeeping, vs_* comparisons) report null.
+    (plan-DB bookkeeping, vs_* comparisons) report null.  The default
+    target is the single-device baseline (``BENCH_pr3.json``); the
+    ``--mesh`` run writes ``BENCH_mesh.json`` so forced-mesh timings
+    never overwrite the single-device trajectory.
     """
     out = {}
     for name in sorted(rows):
@@ -115,7 +139,7 @@ def write_bench_json(repo: str, rows: dict) -> str:
             "gflops": None if gflops is None else round(gflops, 4),
             "max_err": _field(derived, "max_err"),
         }
-    path = os.path.join(repo, BENCH_JSON)
+    path = os.path.join(repo, out_name)
     with open(path, "w") as f:
         json.dump(
             {
@@ -130,11 +154,30 @@ def write_bench_json(repo: str, rows: dict) -> str:
 
 
 def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--mesh", action="store_true",
+        help="force an 8-device CPU mesh for the bench subprocess and "
+             "gate on the mesh.* rows (sharded search + ring collective)",
+    )
+    args = ap.parse_args()
+
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(repo, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
     )
+    required = list(REQUIRED)
+    bench_json = BENCH_JSON
+    if args.mesh:
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+        required += REQUIRED_MESH
+        bench_json = BENCH_MESH_JSON
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.kernel_bench", "--smoke"],
         cwd=repo, env=env, capture_output=True, text=True, timeout=1800,
@@ -155,7 +198,7 @@ def main() -> int:
     failures = []
     print()
     print(f"{'row':32s} {'status':6s} detail")
-    for name in sorted(set(rows) | set(REQUIRED)):
+    for name in sorted(set(rows) | set(required)):
         if name not in rows:
             status, detail = "MISS", "required row absent from bench output"
             failures.append(f"{name}: {detail}")
@@ -173,8 +216,8 @@ def main() -> int:
     if failures:
         print(f"\nFAIL ({len(failures)}):\n  " + "\n  ".join(failures))
         return 1
-    path = write_bench_json(repo, rows)
-    print(f"\nOK: {len(rows)} rows, {len(REQUIRED)} required, all healthy")
+    path = write_bench_json(repo, rows, bench_json)
+    print(f"\nOK: {len(rows)} rows, {len(required)} required, all healthy")
     print(f"baseline written to {path}")
     return 0
 

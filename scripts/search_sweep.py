@@ -14,6 +14,11 @@ Examples:
       --shapes "256,256,256;512,512,512" --no-measure   # analytic only
   python scripts/search_sweep.py --spec matmul --shapes 512,512,512 \
       --interpret --with-grads   # also sweep the derived dA/dB specs
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python scripts/search_sweep.py --spec matmul --shapes 256,256,256 \
+      --interpret --mesh 2x4     # also sweep the mesh (distributed) tier:
+      # sharded ladders persist under mesh-qualified keys and the sharded
+      # candidates are measured over the forced 8-device CPU mesh
   python scripts/search_sweep.py --from-model qwen3-8b --model-smoke \
       --model-batch 2 --model-seq 64 --interpret --with-grads
       # whole-model sweep: harvest the config's full GEMM set via
@@ -96,6 +101,17 @@ def main() -> int:
                     help="also sweep each spec's derived backward specs "
                          "(grad.derive: dA, dB, ...) so training's "
                          "cotangent GEMMs get searched plans too")
+    ap.add_argument("--mesh", default=None, metavar="AxB",
+                    help="also sweep every point at the mesh tier of the "
+                         "given shape ('2x4' = data x model, '2x2x4' adds "
+                         "a pod axis): mesh subdivisions x collective "
+                         "strategies join the beam under the "
+                         "communication-aware cost and the sharded ladder "
+                         "persists under the mesh-qualified plan key.  "
+                         "Sharded candidates are measured when this "
+                         "process can host the mesh (force one with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N), else ranked analytically")
     args = ap.parse_args()
 
     import numpy as np
@@ -172,9 +188,18 @@ def main() -> int:
             )
         spec_name = args.spec
 
+    meshes = [None]
+    if args.mesh:
+        from repro.search import parse_mesh_shape
+
+        meshes.append(parse_mesh_shape(args.mesh))
+
     failures = 0
     for label, spec, shape, dtype in points:
-        print(f"== {spec_name} {'x'.join(map(str, shape))} [{label}] "
+      for mesh_shape in meshes:
+        at = (f" @mesh={'x'.join(map(str, mesh_shape))}"
+              if mesh_shape else "")
+        print(f"== {spec_name} {'x'.join(map(str, shape))} [{label}]{at} "
               f"(beam={args.beam}, topk={args.topk}, dtype={dtype}) ==")
         res = search_schedule(
             spec,
@@ -186,20 +211,29 @@ def main() -> int:
             repeats=args.repeats,
             plan_db=db,
             use_cached_plan=not args.fresh,
+            mesh_shape=mesh_shape,
         )
         s = res.stats
         print(f"   candidates considered={s.considered} "
               f"deduped={s.deduped} pruned(bound)={s.pruned_bound} "
-              f"pruned(beam)={s.pruned_beam} measured={s.measured}")
+              f"pruned(beam)={s.pruned_beam} measured={s.measured} "
+              f"mesh_variants={s.mesh_variants}")
         for rank, p in enumerate(res.ranked):
             t = ("-" if p.measured_s is None
                  else f"{p.measured_s * 1e3:8.2f}ms")
-            print(f"   #{rank} [{p.source:7s}] measured={t} "
+            coll = f" coll={p.collective}" if p.collective else ""
+            print(f"   #{rank} [{p.source:10s}] measured={t} "
                   f"score={p.score:.3e} bound={p.lower_bound:.3e} "
-                  f"vmem_ok={p.fits_vmem}")
+                  f"vmem_ok={p.fits_vmem}{coll}")
             print(f"      {_fmt_sched(p.schedule)}")
         if not res.ranked:
             print("   FAIL: search produced no plan")
+            failures += 1
+            continue
+        if mesh_shape is not None and not any(
+            p.sharded for p in res.ranked
+        ):
+            print("   FAIL: mesh sweep surfaced no mesh:* plan")
             failures += 1
             continue
 
@@ -207,7 +241,7 @@ def main() -> int:
         # winner we just stored
         from repro.codegen.cache import schedule_to_dict
 
-        stored = db.best_schedule(spec, np.dtype(dtype))
+        stored = db.best_schedule(spec, np.dtype(dtype), mesh=res.mesh)
         if stored is None or (
             json.dumps(schedule_to_dict(stored), sort_keys=True)
             != json.dumps(schedule_to_dict(res.best.schedule), sort_keys=True)

@@ -119,37 +119,47 @@ def sweep_captured(
     measure: bool = True,
     repeats: int = 1,
     verbose: bool = False,
+    mesh_shape=None,
 ) -> int:
     """Search + persist ranked plans for every harvested GEMM point.
 
     Each point expands through ``search.space.sweep_specs`` (fwd plus the
     derived dA/dB/... specs when ``with_grads``), so the plan DB ends up
-    covering the captured model's full fwd+bwd GEMM traffic.  Returns the
-    number of (spec, dtype) sweep points persisted.
+    covering the captured model's full fwd+bwd GEMM traffic.  With
+    ``mesh_shape`` ('2x4') every sweep point is *additionally* swept at
+    the mesh tier, persisting sharded ladders under the mesh-qualified
+    keys — the whole-model analogue of ``scripts/search_sweep.py --mesh``:
+    a captured model then serves/trains through sharded generated kernels
+    whenever a matching mesh is active (``ops._mesh_plan_kernel``).
+    Returns the number of (spec, dtype, mesh) sweep points persisted.
     """
     from ..search import default_plan_db, search_schedule, sweep_specs
 
     db = plan_db if plan_db is not None else default_plan_db()
     n = 0
+    meshes = [None] + ([mesh_shape] if mesh_shape is not None else [])
     for label, spec, dtype in points:
         for sub_label, sub in sweep_specs(spec, with_grads=with_grads):
-            res = search_schedule(
-                sub,
-                dtype=np.dtype(dtype),
-                beam_width=beam_width,
-                topk=topk,
-                interpret=interpret,
-                measure=measure,
-                repeats=repeats,
-                plan_db=db,
-            )
-            n += 1
-            if verbose:
-                best = res.best
-                t = ("-" if best.measured_s is None
-                     else f"{best.measured_s * 1e3:.2f}ms")
-                print(f"[capture-sweep] {label}/{sub_label} "
-                      f"dtype={dtype} best={t} (db={db.path})")
+            for ms in meshes:
+                res = search_schedule(
+                    sub,
+                    dtype=np.dtype(dtype),
+                    beam_width=beam_width,
+                    topk=topk,
+                    interpret=interpret,
+                    measure=measure,
+                    repeats=repeats,
+                    plan_db=db,
+                    mesh_shape=ms,
+                )
+                n += 1
+                if verbose:
+                    best = res.best
+                    t = ("-" if best.measured_s is None
+                         else f"{best.measured_s * 1e3:.2f}ms")
+                    at = f"@mesh={res.mesh}" if res.mesh else ""
+                    print(f"[capture-sweep] {label}/{sub_label}{at} "
+                          f"dtype={dtype} best={t} (db={db.path})")
     return n
 
 

@@ -37,8 +37,19 @@ Entry point::
 """
 
 from .cache import AutotuneCache, cache_key, default_cache, hardware_fingerprint
+from .collectives import (
+    all_reduce,
+    naive_gather_matmul,
+    ring_gather_matmul,
+    ring_psum,
+)
 from .epilogue import Epilogue
-from .mesh_gen import bind_mesh, operand_partition_spec, output_partition_spec
+from .mesh_gen import (
+    MeshBoundKernel,
+    bind_mesh,
+    operand_partition_spec,
+    output_partition_spec,
+)
 from .pallas_gen import CompiledKernel, cached_compile, compile_kernel
 from .plan import KernelPlan, build_plan
 from .schedules import (
@@ -57,6 +68,8 @@ __all__ = [
     "CompiledKernel",
     "Epilogue",
     "KernelPlan",
+    "MeshBoundKernel",
+    "all_reduce",
     "batched_matmul_schedule",
     "bind_mesh",
     "build_plan",
@@ -68,8 +81,11 @@ __all__ = [
     "default_cache",
     "default_schedule",
     "hardware_fingerprint",
+    "naive_gather_matmul",
     "operand_partition_spec",
     "output_partition_spec",
+    "ring_gather_matmul",
+    "ring_psum",
     "transposed_matmul_schedule",
     "tune_schedule",
 ]

@@ -5,22 +5,26 @@ A ``mesh:*`` level shards its root index over the named mesh axis:
   * map (output) indices  -> the operand and output axes are partitioned
     with a ``PartitionSpec`` entry naming the mesh axis;
   * reduce indices        -> operands are partitioned, each shard computes
-    a partial contraction, and a ``lax.psum`` over the axis completes the
-    reduction (the generated analogue of the reduce-scatter the launch
-    layer does for gradients).
+    a partial contraction, and a collective over the axis completes the
+    reduction.  The lowering of that collective is a per-plan **strategy**
+    (``collective=``): plain ``lax.psum``, or the ring-overlap form
+    (``collectives.ring_psum``, promoted from ``launch.overlap``) whose
+    ppermute hops can hide behind compute on TPU.  The search treats the
+    strategy as part of the variant (``search.space.COLLECTIVES``).
 
 ``bind_mesh`` wraps a ``CompiledKernel`` (which always works on local,
-per-shard shapes) into a callable over global arrays.
+per-shard shapes) into a ``MeshBoundKernel`` over global arrays.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Tuple
 
-from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from .collectives import STRATEGIES, all_reduce
 from .plan import KernelPlan
 
 
@@ -47,21 +51,56 @@ def reduce_mesh_axes(plan: KernelPlan) -> Tuple[str, ...]:
     return tuple(out)
 
 
-def bind_mesh(kernel, mesh):
+@dataclasses.dataclass
+class MeshBoundKernel:
+    """A generated kernel shard_mapped over a device mesh.
+
+    Call with GLOBAL arrays (operands in spec order, epilogue vectors by
+    keyword); carries the inner ``CompiledKernel`` so callers that
+    introspect ``.schedule``/``.plan`` (tests, ``ops._tuned_kernel``) see
+    the same surface as the single-device object.
+    """
+
+    kernel: object            # the local-shape CompiledKernel
+    mesh: object
+    collective: str
+    _call: object = dataclasses.field(repr=False, default=None)
+
+    @property
+    def spec(self):
+        return self.kernel.spec
+
+    @property
+    def schedule(self):
+        return self.kernel.schedule
+
+    @property
+    def plan(self) -> KernelPlan:
+        return self.kernel.plan
+
+    def __call__(self, *arrays, **vectors):
+        return self._call(*arrays, **vectors)
+
+
+def bind_mesh(kernel, mesh, collective: str = "psum") -> MeshBoundKernel:
     """Wrap a CompiledKernel into a shard_map over ``mesh``.
 
-    Returns ``call(*operands, **epilogue_vectors)`` on GLOBAL arrays.
-    Epilogue vectors are sharded like the last output axis.
+    Returns a ``MeshBoundKernel`` called on GLOBAL arrays.  Epilogue
+    vectors are sharded like the last output axis.  ``collective`` picks
+    the finishing-reduction lowering for mesh-sharded reduce indices
+    (``"psum"`` or ``"ring"``, see ``collectives``).
 
     Ordering with sharded reductions: the epilogue must see the FULL sum,
     not per-shard partials — act(psum(partial) + bias), never
     psum(act(partial + bias)).  When a reduce index is mesh-sharded the
     in-kernel epilogue is disabled and re-applied here after the psum.
     """
-    import dataclasses
-
     import jax.numpy as jnp
 
+    if collective not in STRATEGIES:
+        raise ValueError(
+            f"unknown collective {collective!r}; choose from {STRATEGIES}"
+        )
     plan = kernel.plan
     names = kernel.names
     epilogue = kernel.epilogue
@@ -86,7 +125,7 @@ def bind_mesh(kernel, mesh):
         vecs = args[len(names) :]
         out = inner._fn(*ops) if defer_epilogue else inner._fn(*args)
         if psum_axes:
-            out = lax.psum(out, psum_axes)
+            out = all_reduce(out, psum_axes, collective)
         if defer_epilogue:
             vectors = {
                 nm: v.astype(jnp.float32).reshape(
@@ -112,4 +151,6 @@ def bind_mesh(kernel, mesh):
             raise TypeError(f"epilogue vectors missing: {sorted(missing)}")
         return wrapped(*arrays, *(vectors[v] for v in vec_names))
 
-    return call
+    return MeshBoundKernel(
+        kernel=kernel, mesh=mesh, collective=collective, _call=call
+    )

@@ -281,13 +281,16 @@ def compile_kernel(
     out_dtype=None,
     interpret: bool = False,
     mesh=None,
+    collective: str = "psum",
 ):
     """Compile any ContractionSpec + Schedule into a runnable kernel.
 
     ``spec`` may be the root spec or the schedule's own (subdivided) spec;
     they must share a root.  Returns a ``CompiledKernel`` (local shapes),
     or — when ``mesh`` is given and the schedule has mesh tiers — the
-    shard_map-wrapped callable over global arrays.
+    shard_map-wrapped ``MeshBoundKernel`` over global arrays.
+    ``collective`` picks the finishing-reduction strategy for mesh-sharded
+    reduce indices (``"psum"`` | ``"ring"``, see ``codegen.collectives``).
     """
     if spec.root() is not schedule.spec.root() and (
         spec.root().operands != schedule.spec.root().operands
@@ -306,7 +309,7 @@ def compile_kernel(
     if mesh is not None:
         from .mesh_gen import bind_mesh
 
-        return bind_mesh(kernel, mesh)
+        return bind_mesh(kernel, mesh, collective=collective)
     return kernel
 
 
@@ -320,22 +323,36 @@ def cached_compile(
     epilogue: Optional[Epilogue] = None,
     out_dtype=None,
     interpret: bool = False,
-) -> CompiledKernel:
-    """compile_kernel memoized on (spec, schedule, epilogue, dtype, interpret).
+    mesh=None,
+    collective: str = "psum",
+):
+    """compile_kernel memoized on (spec, schedule, epilogue, dtype, interpret,
+    mesh identity, collective).
 
     Hot-path entry for ``ops``/``launch``: repeated calls with the same
-    contraction reuse one jitted kernel instead of re-tracing.
+    contraction reuse one jitted kernel instead of re-tracing.  Mesh-bound
+    kernels key on the mesh's axes and device ids, so two distinct meshes
+    of the same shape get distinct shard_map closures.
     """
     import json
 
     from .cache import schedule_to_dict, spec_signature
 
+    mesh_key = None
+    if mesh is not None:
+        mesh_key = (
+            tuple(mesh.axis_names),
+            tuple(int(s) for s in mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat),
+        )
     key = (
         json.dumps(spec_signature(spec), sort_keys=True),
         json.dumps(schedule_to_dict(schedule), sort_keys=True),
         epilogue,
         str(out_dtype) if out_dtype is not None else None,
         interpret,
+        mesh_key,
+        collective if mesh is not None else None,
     )
     kern = _KERNEL_MEMO.get(key)
     if kern is None:
@@ -345,6 +362,8 @@ def cached_compile(
             epilogue=epilogue,
             out_dtype=out_dtype,
             interpret=interpret,
+            mesh=mesh,
+            collective=collective,
         )
         _KERNEL_MEMO[key] = kern
     return kern

@@ -59,9 +59,43 @@ def set_mesh(mesh):
 
 
 def axis_size(axis_name: str) -> int:
-    """lax.axis_size where available; psum(1) constant-folds on 0.4.37."""
-    from jax import lax
+    """lax.axis_size where available; psum(1) constant-folds on 0.4.37.
 
-    if hasattr(lax, "axis_size"):
-        return lax.axis_size(axis_name)
-    return lax.psum(1, axis_name)
+    Single implementation lives with the collectives (codegen cannot
+    import launch without inverting layering); this is the launch-facing
+    name.
+    """
+    from ..codegen.collectives import _axis_size
+
+    return _axis_size(axis_name)
+
+
+def active_mesh():
+    """The mesh the current (trace) context is running under, or None.
+
+    On 0.4.x this is the ``with mesh:`` context (``thread_resources``);
+    newer jax exposes ``jax.set_mesh``/abstract meshes — we try the
+    thread-resources path first because that is what ``set_mesh`` returns
+    on the pinned version.  ``ops._tuned_kernel`` consults this to decide
+    whether a mesh-qualified plan lookup applies.
+    """
+    try:
+        from jax.interpreters.pxla import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:  # jax >= 0.6: an explicitly set global mesh
+        m = jax.sharding.get_mesh()  # type: ignore[attr-defined]
+        if m is not None and getattr(m, "size", 0) > 1:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def mesh_shape_descriptor(mesh) -> str:
+    """'2x4'-style descriptor of a mesh (the plan-key qualifier)."""
+    return "x".join(str(int(s)) for s in mesh.devices.shape)

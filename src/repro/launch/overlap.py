@@ -1,62 +1,18 @@
-"""Compute/communication overlap: ring (ppermute-pipelined) collective
-matmul, the shard_map building block for TP matmuls whose all-gather would
-otherwise serialize before the MXU work (Wang et al.-style).
+"""Compute/communication overlap — re-export shim.
 
-``ring_gather_matmul`` computes ``y = X @ W`` where X's rows are sharded
-over ``axis_name`` and W is replicated per shard-column group: instead of
-``all_gather(X) @ W`` (communication then compute), each of the P steps
-multiplies the currently-held X shard while ppermuting it to the neighbour —
-the collective hides behind the matmul of the previous chunk.  On TPU the
-ICI transfer of step i+1 overlaps the MXU work of step i; on CPU
-(tests) the result is simply verified equal to the reference.
-
-This is the distribution-level analogue of the paper's pipelined subdivision:
-the reduction over shards is an ``rnz`` whose blocks arrive one ``flip``
-(ring rotation) at a time.
+The ring (ppermute-pipelined) collective machinery was promoted into
+``repro.codegen.collectives`` so generated mesh-tier kernels can choose it
+as a per-plan collective strategy (``bind_mesh(collective="ring")``); the
+launch layer keeps importing from here.  See ``codegen/collectives.py``
+for the implementations and the overlap story.
 """
 
 from __future__ import annotations
 
-import functools
+from ..codegen.collectives import (  # noqa: F401
+    naive_gather_matmul,
+    ring_gather_matmul,
+    ring_psum,
+)
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-
-def ring_gather_matmul(x_shard: jax.Array, w: jax.Array, axis_name: str):
-    """Inside shard_map: x_shard (m_loc, k), w (k, n) -> y rows for ALL
-    shards, (P * m_loc, n), equal to all_gather(x) @ w.
-
-    The explicit ring exposes the overlap to the scheduler; the naive form
-    must finish the all-gather before the first flop.
-    """
-    from .mesh import axis_size
-
-    p = axis_size(axis_name)
-    idx = lax.axis_index(axis_name)
-
-    def step(carry, _):
-        x_cur, src = carry
-        y_part = jnp.dot(x_cur, w, preferred_element_type=jnp.float32)
-        x_nxt = lax.ppermute(
-            x_cur, axis_name,
-            perm=[(i, (i + 1) % p) for i in range(p)],
-        )
-        src_nxt = (src - 1) % p
-        return (x_nxt, src_nxt), (src, y_part)
-
-    (_, _), (srcs, parts) = lax.scan(step, (x_shard, idx), None, length=p)
-    # parts[i] are the rows originating from shard srcs[i]; scatter to order
-    order = jnp.argsort(srcs)
-    parts = jnp.take(parts, order, axis=0)  # (P, m_loc, n)
-    m_loc, n = x_shard.shape[0], w.shape[1]
-    return parts.reshape(p * m_loc, n).astype(x_shard.dtype)
-
-
-def naive_gather_matmul(x_shard: jax.Array, w: jax.Array, axis_name: str):
-    """Reference: blocking all-gather then one big dot."""
-    x_full = lax.all_gather(x_shard, axis_name, axis=0, tiled=True)
-    return jnp.dot(
-        x_full, w, preferred_element_type=jnp.float32
-    ).astype(x_shard.dtype)
+__all__ = ["naive_gather_matmul", "ring_gather_matmul", "ring_psum"]

@@ -38,12 +38,36 @@ class BatchServer:
 
     def __init__(self, cfg, *, batch_size: int, max_len: int,
                  extra_batch=None, warm_gemms=(), search_gemms=(),
-                 search_grads: bool = True, capture: bool = False):
+                 search_grads: bool = True, capture: bool = False,
+                 mesh_shape=None):
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
         self.extra_batch = extra_batch or {}
+        # --mesh AxB: sweeps below additionally persist mesh-qualified
+        # sharded ladders, and — when this replica can host the mesh —
+        # the serving steps trace under it so ops._tuned_kernel dispatches
+        # through the sharded generated kernels (codegen.bind_mesh).
+        self.mesh = None
+        self.mesh_shape = None
+        if mesh_shape:
+            from ..search import parse_mesh_shape
+            from .mesh import make_debug_mesh
+
+            self.mesh_shape = parse_mesh_shape(mesh_shape)
+            import math as _math
+
+            from ..search.space import mesh_axis_names
+
+            if _math.prod(self.mesh_shape) <= jax.device_count():
+                self.mesh = make_debug_mesh(
+                    self.mesh_shape, mesh_axis_names(len(self.mesh_shape))
+                )
+            else:
+                print(f"[serve] --mesh {mesh_shape}: only "
+                      f"{jax.device_count()} device(s) visible — sweeping "
+                      f"mesh plans for the fleet, serving single-device")
         # Whole-model capture: harvest the prefill + decode GEMM sets
         # (abstract trace — no allocation), sweep every harvested spec
         # into the ranked plan DB (fwd, plus derived bwd specs unless
@@ -76,6 +100,7 @@ class BatchServer:
             n = _capture.sweep_captured(
                 list(points.values()), with_grads=search_grads, plan_db=db,
                 interpret=jax.default_backend() != "tpu",
+                mesh_shape=self.mesh_shape,
             )
             print(f"[serve] capture swept {n} plan point(s) "
                   f"({len(points)} unique GEMM spec(s)) -> {db.path}")
@@ -113,10 +138,13 @@ class BatchServer:
                 interpret=jax.default_backend() != "tpu",
                 plan_db=db,
                 with_grads=search_grads,
+                mesh_shape=self.mesh_shape,
             )
             what = "fwd + derived bwd" if search_grads else "fwd only"
+            at = (f" + mesh={'x'.join(map(str, self.mesh_shape))}"
+                  if self.mesh_shape else "")
             print(f"[serve] searched {n} GEMM plan(s) "
-                  f"({what}) -> {db.path}")
+                  f"({what}{at}) -> {db.path}")
         self.params, _ = self.api.init(cfg, jax.random.key(0))
         decode_fn = lambda p, c, t: self.api.decode_step(  # noqa: E731
             p, self.cfg, c, t
@@ -136,9 +164,25 @@ class BatchServer:
         self._decode = jax.jit(decode_fn)
         self._prefill_fn = prefill_fn
 
+    def _mesh_ctx(self):
+        """Trace/run context: the serving mesh when hosted, else a no-op.
+
+        Entering the mesh at call time is what lets ``ops._tuned_kernel``
+        (consulted while jit traces the step) see an active mesh and pick
+        the mesh-qualified sharded plans this server swept.
+        """
+        import contextlib
+
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from .mesh import set_mesh
+
+        return set_mesh(self.mesh)
+
     def _prefill(self, tokens: np.ndarray):
         batch = {"tokens": jnp.asarray(tokens), **self.extra_batch}
-        return self._prefill_fn(self.params, batch)
+        with self._mesh_ctx():
+            return self._prefill_fn(self.params, batch)
 
     def run(self, requests: List[Request], greedy: bool = True):
         assert len(requests) <= self.batch_size
@@ -161,9 +205,10 @@ class BatchServer:
                         r.done = True
             if all(r.done for r in requests):
                 break
-            logits, caches = self._decode(
-                self.params, caches, next_tok[:, None]
-            )
+            with self._mesh_ctx():
+                logits, caches = self._decode(
+                    self.params, caches, next_tok[:, None]
+                )
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         decode_s = time.time() - t1
         n_tokens = sum(len(r.out_tokens) for r in requests)
@@ -201,6 +246,14 @@ def main():
         help="with --search-gemms/--capture, sweep only the forward "
              "specs (inference-only replicas skip the backward-plan "
              "cost)",
+    )
+    ap.add_argument(
+        "--mesh", default=None, metavar="AxB",
+        help="mesh shape ('2x4' = data x model) for the distributed "
+             "schedule tier: --search-gemms/--capture sweeps also persist "
+             "mesh-qualified sharded ladders, and when this process can "
+             "host the mesh the serving steps trace under it so eligible "
+             "GEMMs dispatch through sharded generated kernels",
     )
     ap.add_argument(
         "--capture", action="store_true",
@@ -249,6 +302,7 @@ def main():
         search_gemms=search,
         search_grads=not args.no_search_grads,
         capture=args.capture,
+        mesh_shape=args.mesh,
     )
     stats = server.run(reqs)
     print(

@@ -108,6 +108,7 @@ def make_train_step(
     lr_schedule: Optional[Callable] = None,
     microbatch: int = 1,
     capture: Optional[bool] = None,
+    mesh=None,
 ):
     """Loss + grad + optimizer update for one (micro)batch.
 
@@ -124,7 +125,15 @@ def make_train_step(
     are harvested into ContractionSpecs and, where eligible, dispatched
     through the same plan-DB pipeline, fwd and bwd.  Ineligible sites run
     untouched, so this is a strict superset of the uncaptured step.
+
+    ``mesh`` activates that mesh for the step body at trace time, so
+    ``ops._tuned_kernel`` consults the mesh-shape-qualified plan keys a
+    ``--mesh`` sweep persisted and eligible GEMMs dispatch through the
+    sharded generated kernels (``codegen.bind_mesh``).  Callers that
+    already trace under ``with set_mesh(mesh)`` (``train_bundle`` users)
+    get the same behaviour without passing it.
     """
+    import contextlib
     import os
 
     api = get_api(cfg)
@@ -140,8 +149,17 @@ def make_train_step(
     else:
         loss_inner = base_loss
 
+    def _mesh_ctx():
+        if mesh is None:
+            return contextlib.nullcontext()
+        from .mesh import set_mesh
+
+        return set_mesh(mesh)
+
     def train_step(params, opt_state, batch):
-        loss_fn = loss_inner
+        def loss_fn(p, b):
+            with _mesh_ctx():  # nullcontext when no mesh was given
+                return loss_inner(p, b)
 
         if microbatch > 1:
             def split(x):
@@ -211,7 +229,7 @@ def train_bundle(
     )
 
     step = make_train_step(cfg, opt_cfg, microbatch=microbatch,
-                           capture=capture)
+                           capture=capture, mesh=mesh)
     metrics_shard = {
         "grad_norm": NamedSharding(mesh, P()),
         "clip_scale": NamedSharding(mesh, P()),

@@ -57,15 +57,56 @@ def _use_pallas() -> bool:
         return False
 
 
+def _mesh_plan_kernel(spec, dtype, *, epilogue=None, interpret=False):
+    """Sharded generated kernel from a mesh-qualified plan, or None.
+
+    When the calling context runs under a device mesh (``launch.mesh
+    .set_mesh`` / ``with mesh:`` — checked at trace time), the plan DB is
+    consulted under the mesh-shape-qualified key ('2x4'-style,
+    ``search.plandb.plan_key(mesh=...)``) for the best rung that actually
+    distributes (``best_sharded_entry`` — under a live mesh the operands
+    are sharded, so a mesh ladder's single-device reference rungs do not
+    apply).  A sharded plan whose mesh axes match the active mesh
+    compiles through ``codegen.bind_mesh`` with the plan's measured
+    collective strategy.  Any mismatch (axis names/sizes, no plan)
+    returns None and the caller falls back to the unqualified lookup — a
+    replica without mesh sweeps behaves exactly as before.
+    """
+    from .. import codegen
+    from ..launch.mesh import active_mesh, mesh_shape_descriptor
+
+    mesh = active_mesh()
+    if mesh is None or getattr(mesh, "size", 1) <= 1:
+        return None
+    from ..search import default_plan_db, schedule_mesh_axes
+
+    sched, entry = default_plan_db().best_sharded_entry(
+        spec, np.dtype(dtype), mesh=mesh_shape_descriptor(mesh)
+    )
+    if sched is None:
+        return None
+    axes = schedule_mesh_axes(sched)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if any(shape.get(a) != n for a, n in axes.items()):
+        return None
+    return codegen.cached_compile(
+        spec, sched, epilogue=epilogue, interpret=interpret,
+        mesh=mesh, collective=entry.get("collective") or "psum",
+    )
+
+
 def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
     """Generated kernel for ``spec``: searched plan first, tuned fallback.
 
     The ranked plan database (``repro.search``) is consulted before the
     analytic tuner: an offline ``scripts/search_sweep.py`` run or a
     ``serve --search-gemms`` warmup leaves a measured-best schedule there,
-    and every later call for the same spec/shape/dtype picks it up.  With
-    no plan on record this degrades to PR-1 behaviour
-    (``codegen.tune_schedule`` + persistent autotune cache).
+    and every later call for the same spec/shape/dtype picks it up.  When
+    a device mesh is active the mesh-shape-qualified key is consulted
+    first (``_mesh_plan_kernel``), so a ``--mesh`` sweep upgrades every
+    op under that mesh to sharded generated kernels.  With no plan on
+    record this degrades to PR-1 behaviour (``codegen.tune_schedule`` +
+    persistent autotune cache).
     """
     from .. import codegen
 
@@ -76,6 +117,11 @@ def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
     try:
         from ..search import default_plan_db
 
+        kern = _mesh_plan_kernel(
+            spec, dtype, epilogue=epilogue, interpret=interpret
+        )
+        if kern is not None:
+            return kern
         schedule = default_plan_db().best_schedule(spec, np.dtype(dtype))
     except Exception as e:
         global _plan_db_warned

@@ -34,6 +34,62 @@ PEAK_FLOPS = 197e12   # bf16 / chip
 HBM_BW = 819e9        # B/s / chip
 ICI_BW = 50e9         # B/s / link
 
+#: bytes a ring algorithm moves per device, as a multiple of the payload:
+#: ring all-reduce sends the payload twice (reduce-scatter + all-gather),
+#: the one-phase collectives once.  The (shards-1)/shards factor is applied
+#: by ``collective_seconds``.
+COLLECTIVE_BYTE_FACTOR = {
+    "psum": 2.0,          # lax.psum lowers to an all-reduce
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+}
+
+
+def collective_seconds(
+    kind: str, nbytes: float, shards: int, hw_ici_bw: float = ICI_BW
+) -> float:
+    """Per-device link time of one collective over ``shards`` participants.
+
+    Ring-algorithm byte model: a payload of ``nbytes`` costs
+    ``factor * nbytes * (shards - 1) / shards`` bytes on the busiest link,
+    where ``factor`` is 2 for all-reduce (reduce-scatter then all-gather)
+    and 1 for the single-phase collectives.  This is the interconnect half
+    of the roofline the mesh-tier search scores against (``search.beam``).
+    """
+    if shards <= 1:
+        return 0.0
+    factor = COLLECTIVE_BYTE_FACTOR[kind]
+    return factor * nbytes * (shards - 1) / shards / hw_ici_bw
+
+
+def sharded_reduce_seconds(
+    nbytes: float,
+    shards: int,
+    *,
+    collective: str = "psum",
+    compute_s: float = 0.0,
+    hw_ici_bw: float = ICI_BW,
+) -> float:
+    """Exposed communication time to finish a mesh-sharded reduction.
+
+    ``psum``: a plain all-reduce of the per-device partial output — fully
+    exposed (the kernel must finish before the collective starts).
+
+    ``ring``: the ring-overlap lowering (``codegen.collectives.ring_psum``,
+    promoted from ``launch.overlap``): the reduce-scatter phase pipelines
+    behind the partial-product compute (each ppermute hop hides behind the
+    next chunk's MXU work, Wang et al.-style), so only the part of it that
+    exceeds ``compute_s`` plus the trailing all-gather is exposed.
+    """
+    if shards <= 1:
+        return 0.0
+    if collective == "ring":
+        rs = collective_seconds("reduce-scatter", nbytes, shards, hw_ici_bw)
+        ag = collective_seconds("all-gather", nbytes, shards, hw_ici_bw)
+        return max(rs - compute_s, 0.0) + ag
+    return collective_seconds("psum", nbytes, shards, hw_ici_bw)
+
 _SUGGEST = {
     "compute": "raise arithmetic efficiency: larger per-chip batch or less "
                "remat recompute (MODEL/HLO flops ratio shows the headroom)",

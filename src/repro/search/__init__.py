@@ -46,14 +46,25 @@ from ..core.enumerate import (
 )
 from ..core.schedule import Schedule
 from .beam import CostEstimate, ScoredCandidate, SearchStats, beam_search, estimate
-from .measure import Measurement, einsum_reference, measure_schedules, reference_arrays
+from .measure import (
+    Measurement,
+    einsum_reference,
+    measure_schedules,
+    mesh_for_schedules,
+    reference_arrays,
+    schedule_mesh_axes,
+)
 from .plandb import PlanDB, default_plan_db, entry_from, grad_plan_keys, plan_key
 from .space import (
     Candidate,
+    MeshVariant,
     block_choices,
     candidate_orders,
     candidate_schedule,
     make_candidate,
+    mesh_descriptor,
+    mesh_variants,
+    parse_mesh_shape,
     sweep_specs,
 )
 
@@ -89,7 +100,14 @@ class RankedPlan:
     fits_vmem: bool
     measured_s: Optional[float] = None
     max_err: Optional[float] = None
-    source: str = "search"  # or "default" for the baseline entry
+    source: str = "search"  # "default"/"mesh-naive" for baseline entries
+    collective: str = ""    # finishing-collective strategy of a mesh plan
+
+    @property
+    def sharded(self) -> bool:
+        from .measure import schedule_mesh_axes
+
+        return bool(schedule_mesh_axes(self.schedule))
 
 
 @dataclasses.dataclass
@@ -99,6 +117,7 @@ class SearchResult:
     ranked: List[RankedPlan]  # best first
     stats: SearchStats
     db_key: Optional[str] = None
+    mesh: Optional[str] = None  # mesh descriptor ('2x4') of a mesh search
 
     @property
     def best(self) -> RankedPlan:
@@ -107,6 +126,19 @@ class SearchResult:
     def baseline(self) -> Optional[RankedPlan]:
         for p in self.ranked:
             if p.source == "default":
+                return p
+        return None
+
+    def mesh_baseline(self) -> Optional[RankedPlan]:
+        """The naive-psum lowering of the best sharded subdivision."""
+        for p in self.ranked:
+            if p.source == "mesh-naive":
+                return p
+        return None
+
+    def best_sharded(self) -> Optional[RankedPlan]:
+        for p in self.ranked:
+            if p.sharded:
                 return p
         return None
 
@@ -126,6 +158,7 @@ def search_schedule(
     include_default: bool = True,
     plan_db: Optional[PlanDB] = None,
     use_cached_plan: bool = True,
+    mesh_shape=None,
 ) -> SearchResult:
     """The end-to-end pipeline: enumerate -> prune -> measure -> persist.
 
@@ -135,17 +168,35 @@ def search_schedule(
     the winner is by construction never slower than the default on the
     measurement harness used.
 
+    ``mesh_shape`` ('2x4' or (2, 4)) extends the search to the mesh tier:
+    legal mesh subdivisions × collective strategies join the beam under
+    the communication-aware cost (``beam.estimate``), the ladder always
+    surfaces at least one ``mesh:*`` plan, and a "mesh-naive" baseline
+    (the plain-psum, unblocked lowering of the best sharded subdivision)
+    rides through measurement so the searched sharded winner is by
+    construction never slower than it.  Sharded candidates are measured
+    through ``codegen.bind_mesh`` over the visible devices (force a CPU
+    mesh with ``--xla_force_host_platform_device_count``); when the
+    process cannot host the mesh they keep their analytic rank behind the
+    measured single-device plans.  The ladder persists under the
+    mesh-qualified plan key (``matmul@mesh=2x4``-style).
+
     ``plan_db`` (or pass ``default_plan_db()``) persists the ladder;
     ``use_cached_plan`` short-circuits a repeated search of the same
-    spec/dtype/hardware from the DB.
+    spec/dtype/hardware/mesh from the DB.
     """
     spec = spec.root()
     dt = np.dtype(dtype)
     if elem_bytes is None:
         elem_bytes = dt.itemsize
+    if isinstance(mesh_shape, str):
+        mesh_shape = parse_mesh_shape(mesh_shape)
+    mesh_desc = mesh_descriptor(mesh_shape)
+    if mesh_desc is None:
+        mesh_shape = None
 
     if plan_db is not None and use_cached_plan:
-        cached = plan_db.get(spec, dt)
+        cached = plan_db.get(spec, dt, mesh=mesh_desc)
         if (
             cached
             and cached.get("ranked")
@@ -170,6 +221,7 @@ def search_schedule(
                         fits_vmem=e.get("fits_vmem", True),
                         measured_s=e.get("measured_s"),
                         source=e.get("source", "search"),
+                        collective=e.get("collective", ""),
                     )
                 )
             if ranked:
@@ -179,12 +231,13 @@ def search_schedule(
                         setattr(stats, k, v)
                 return SearchResult(
                     spec=spec, dtype=str(dt), ranked=ranked, stats=stats,
-                    db_key=plan_key(spec, dt),
+                    db_key=plan_key(spec, dt, mesh=mesh_desc),
+                    mesh=mesh_desc,
                 )
 
     survivors, stats = beam_search(
         spec, beam_width=beam_width, topk=topk,
-        elem_bytes=elem_bytes, hw=hw,
+        elem_bytes=elem_bytes, hw=hw, mesh_shape=mesh_shape,
     )
     plans: List[RankedPlan] = [
         RankedPlan(
@@ -192,6 +245,7 @@ def search_schedule(
             score=sc.cost.score,
             lower_bound=sc.cost.lower_bound,
             fits_vmem=sc.cost.fits_vmem,
+            collective=sc.candidate.collective,
         )
         for sc in survivors
     ]
@@ -220,21 +274,84 @@ def search_schedule(
                 if _sched_dict(p.schedule) == base_dict:
                     p.source = "default"
 
-    if measure and plans:
-        ms = measure_schedules(
-            spec, [p.schedule for p in plans],
-            arrays=arrays, dtype=dt, interpret=interpret, repeats=repeats,
+    # mesh searches also measure the NAIVE lowering of the best sharded
+    # subdivision — same mesh assignment, plain psum, no inner blocking —
+    # so "searched-sharded never slower than naive psum" holds by
+    # construction on the measurement harness (the mesh analogue of the
+    # include_default guarantee)
+    if mesh_shape is not None:
+        best_sharded_sc = next(
+            (sc for sc in survivors if sc.candidate.mesh), None
         )
-        for p, m in zip(plans, ms):
-            p.measured_s = m.seconds
-            p.max_err = m.max_err
-        stats.measured += len(ms)
-        plans.sort(key=lambda p: (p.measured_s, p.score))
+        if best_sharded_sc is not None:
+            naive_sched = candidate_schedule(
+                spec, spec.indices, {},
+                mesh=best_sharded_sc.candidate.mesh_dict,
+            )
+            naive_dict = _sched_dict(naive_sched)
+            naive_hit = [
+                p for p in plans
+                if _sched_dict(p.schedule) == naive_dict
+                and (p.collective or "psum") == "psum"
+            ]
+            if naive_hit:
+                for p in naive_hit:
+                    p.source = "mesh-naive"
+            else:
+                from .space import local_extents
+
+                naive_mesh = best_sharded_sc.candidate.mesh_dict
+                est = estimate(
+                    spec, spec.indices,
+                    local_extents(spec, naive_mesh),
+                    elem_bytes=elem_bytes, hw=hw,
+                    mesh=naive_mesh, collective="psum",
+                )
+                plans.append(
+                    RankedPlan(
+                        schedule=naive_sched,
+                        score=est.score,
+                        lower_bound=est.lower_bound,
+                        fits_vmem=est.fits_vmem,
+                        source="mesh-naive",
+                        collective="psum",
+                    )
+                )
+
+    measured_plans: List[RankedPlan] = []
+    if measure and plans:
+        sharded = [p for p in plans if p.sharded]
+        mesh = mesh_for_schedules([p.schedule for p in sharded])
+        if mesh is None and sharded:
+            # process cannot host the mesh: measure the single-device
+            # candidates, keep sharded ones on their analytic rank
+            measured_plans = [p for p in plans if not p.sharded]
+        else:
+            measured_plans = list(plans)
+        if measured_plans:
+            ms = measure_schedules(
+                spec, [p.schedule for p in measured_plans],
+                arrays=arrays, dtype=dt, interpret=interpret,
+                repeats=repeats, mesh=mesh,
+                collectives=[p.collective for p in measured_plans],
+            )
+            for p, m in zip(measured_plans, ms):
+                p.measured_s = m.seconds
+                p.max_err = m.max_err
+            stats.measured += len(ms)
+        plans.sort(
+            key=lambda p: (
+                p.measured_s is None,
+                p.measured_s if p.measured_s is not None else p.score,
+                p.score,
+            )
+        )
     else:
         plans.sort(key=lambda p: (not p.fits_vmem, p.score))
 
     result = SearchResult(
-        spec=spec, dtype=str(dt), ranked=plans, stats=stats
+        spec=spec, dtype=str(dt), ranked=plans, stats=stats,
+        mesh=mesh_desc,
     )
     if plan_db is not None and plans:
         result.db_key = plan_db.put(
@@ -247,10 +364,12 @@ def search_schedule(
                     fits_vmem=p.fits_vmem,
                     measured_s=p.measured_s,
                     source=p.source,
+                    collective=p.collective,
                 )
                 for p in plans
             ],
             stats=stats.as_dict(),
+            mesh=mesh_desc,
         )
     return result
 
@@ -299,6 +418,7 @@ def search_gemm_plans(
     measure: bool = True,
     plan_db: Optional[PlanDB] = None,
     with_grads: bool = False,
+    mesh_shape=None,
 ) -> int:
     """Search + persist plans for (m, k, n) GEMMs; returns #plans readied.
 
@@ -308,7 +428,10 @@ def search_gemm_plans(
     ``ops.dense`` serves the *searched* schedule from then on.  With
     ``with_grads`` each GEMM's derived backward specs are swept too (the
     count then includes them), preparing the training fleet's cotangent
-    GEMMs from the same warmup.
+    GEMMs from the same warmup.  With ``mesh_shape`` ('2x4') every point
+    is additionally swept at the mesh tier, persisting sharded ladders
+    under the mesh-qualified keys that ``ops._tuned_kernel`` consults
+    when a matching mesh is active (the count includes those sweeps).
     """
     db = plan_db if plan_db is not None else default_plan_db()
     n = 0
@@ -318,11 +441,15 @@ def search_gemm_plans(
             dtype=dtype, beam_width=beam_width, topk=topk,
             interpret=interpret, measure=measure, plan_db=db,
         )
-        if with_grads:
-            n += len(search_schedule_with_grads(spec, **kw))
-        else:
-            search_schedule(spec, **kw)
-            n += 1
+        meshes = [None] + ([mesh_shape] if mesh_shape is not None else [])
+        for ms in meshes:
+            if with_grads:
+                n += len(
+                    search_schedule_with_grads(spec, mesh_shape=ms, **kw)
+                )
+            else:
+                search_schedule(spec, mesh_shape=ms, **kw)
+                n += 1
     return n
 
 
@@ -330,6 +457,7 @@ __all__ = [
     "Candidate",
     "CostEstimate",
     "Measurement",
+    "MeshVariant",
     "PlanDB",
     "RankedPlan",
     "ScoredCandidate",
@@ -347,8 +475,13 @@ __all__ = [
     "grad_plan_keys",
     "make_candidate",
     "measure_schedules",
+    "mesh_descriptor",
+    "mesh_for_schedules",
+    "mesh_variants",
+    "parse_mesh_shape",
     "plan_key",
     "reference_arrays",
+    "schedule_mesh_axes",
     "search_gemm_plans",
     "search_schedule",
     "search_schedule_with_grads",

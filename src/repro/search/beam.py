@@ -36,20 +36,29 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.cost import TPU
 from ..core.enumerate import ContractionSpec
-from .space import Candidate, block_choices, make_candidate
+from .space import (
+    Candidate,
+    MeshVariant,
+    block_choices,
+    local_extents,
+    make_candidate,
+)
+from .space import mesh_variants as enumerate_mesh_variants
 
 
 @dataclasses.dataclass(frozen=True)
 class CostEstimate:
-    """Analytic roofline estimate for one candidate (seconds)."""
+    """Analytic roofline estimate for one candidate (seconds, per device)."""
 
     score: float          # pessimistic proxy for measurement: bound * penalty
-    lower_bound: float    # max(compute, HBM) — no penalties; score >= bound
+    lower_bound: float    # max(compute, HBM, comm) — no penalties
     compute_s: float
     hbm_s: float
     fits_vmem: bool
     penalty: float
     seq_steps: int        # tie-break: fewer fori_loop steps win
+    comm_s: float = 0.0   # exposed collective time (mesh-sharded reductions)
+    shards: int = 1       # devices the candidate spreads over
 
 
 def estimate(
@@ -60,17 +69,33 @@ def estimate(
     elem_bytes: int = 4,
     hw: dict = TPU,
     assigned: Optional[frozenset] = None,
+    mesh: Optional[Dict[str, Tuple[str, int]]] = None,
+    collective: str = "",
 ) -> CostEstimate:
-    """Roofline cost of a (possibly partial) candidate.
+    """Roofline cost of a (possibly partial) candidate, per device.
 
     ``blocks`` must cover every index (callers default unassigned indices to
-    their whole extent — the traffic-minimal choice, which is what makes
-    ``lower_bound`` sound for partial states).  ``assigned`` restricts the
-    alignment penalties to decided indices so a partial state is never
+    their whole *local* extent — the traffic-minimal choice, which is what
+    makes ``lower_bound`` sound for partial states).  ``assigned`` restricts
+    the alignment penalties to decided indices so a partial state is never
     penalized for a choice it has not made yet.
+
+    With ``mesh`` the estimate is the per-device roofline: compute and HBM
+    terms shrink by the shard counts (each device owns a local slice), and
+    a sharded *reduce* index adds the communication term — the exposed
+    link time of the finishing collective under the interconnect model of
+    ``roofline.analysis`` (``psum`` = fully exposed all-reduce; ``ring`` =
+    reduce-scatter pipelined behind compute + exposed all-gather).  The
+    mesh assignment and collective are decided before any block choice, so
+    the comm term is constant across a state's completions and the bound
+    cut stays sound.
     """
     spec = spec.root()
-    extents = spec.extents
+    mesh = dict(mesh or {})
+    extents = local_extents(spec, mesh)  # per-shard view
+    shards = 1
+    for _, n in mesh.values():
+        shards *= n
     n_blocks = {i: extents[i] // blocks[i] for i in spec.output}
     vmem = 0
     traffic = 0.0
@@ -91,8 +116,28 @@ def estimate(
     traffic += math.prod(extents[i] for i in spec.output)
 
     hbm_s = traffic * elem_bytes / hw["hbm_bw"]
-    compute_s = spec.flops() / hw["peak_flops"]
-    lower = max(hbm_s, compute_s)
+    compute_s = spec.flops() / shards / hw["peak_flops"]
+
+    # communication: a mesh-sharded reduce index leaves every device with a
+    # partial local output that a collective must finish
+    comm_s = 0.0
+    reduce_shards = 1
+    for i, (_, n) in mesh.items():
+        if i not in spec.output:
+            reduce_shards *= n
+    if reduce_shards > 1:
+        from ..roofline.analysis import sharded_reduce_seconds
+
+        out_bytes = math.prod(extents[i] for i in spec.output) * elem_bytes
+        comm_s = sharded_reduce_seconds(
+            out_bytes,
+            reduce_shards,
+            collective=collective or "psum",
+            compute_s=compute_s,
+            hw_ici_bw=hw.get("ici_bw", 50e9),
+        )
+
+    lower = max(hbm_s, compute_s, comm_s)
     fits = vmem * elem_bytes <= hw["vmem_bytes"]
 
     decided = assigned if assigned is not None else frozenset(spec.indices)
@@ -125,6 +170,8 @@ def estimate(
         fits_vmem=fits,
         penalty=penalty,
         seq_steps=seq_steps,
+        comm_s=comm_s,
+        shards=shards,
     )
 
 
@@ -137,6 +184,7 @@ class SearchStats:
     pruned_bound: int = 0   # sound roofline cuts
     pruned_beam: int = 0    # heuristic width trims
     measured: int = 0       # candidates actually lowered + timed
+    mesh_variants: int = 0  # mesh subdivisions enumerated (0 = no mesh)
     #: (canonical_key, lower_bound, best_complete_score_at_prune)
     bound_log: List[Tuple[str, float, float]] = dataclasses.field(
         default_factory=list
@@ -149,6 +197,7 @@ class SearchStats:
             "pruned_bound": self.pruned_bound,
             "pruned_beam": self.pruned_beam,
             "measured": self.measured,
+            "mesh_variants": self.mesh_variants,
         }
 
 
@@ -168,11 +217,13 @@ def _greedy_complete(
     choices: Dict[str, List[int]],
     elem_bytes: int,
     hw: dict,
+    variant: MeshVariant = MeshVariant(),
 ) -> ScoredCandidate:
     """Cheapest single-path completion — seeds the bound cut with a real
     complete candidate before the beam has finished any."""
+    mesh = variant.as_dict()
     blocks: Dict[str, int] = {}
-    defaults = {i: spec.extents[i] for i in spec.indices}
+    defaults = local_extents(spec, mesh)
     for index in spec.indices:
         best_b, best_s = None, None
         for b in choices[index]:
@@ -180,14 +231,21 @@ def _greedy_complete(
             est = estimate(
                 spec, order, trial, elem_bytes=elem_bytes, hw=hw,
                 assigned=frozenset(blocks) | {index},
+                mesh=mesh, collective=variant.collective,
             )
             key = (not est.fits_vmem, est.score, est.seq_steps, b)
             if best_s is None or key < best_s:
                 best_b, best_s = b, key
         blocks[index] = best_b
-    cand = make_candidate(spec, order, blocks)
+    cand = make_candidate(
+        spec, order, blocks, mesh=mesh, collective=variant.collective
+    )
     return ScoredCandidate(
-        cand, estimate(spec, order, blocks, elem_bytes=elem_bytes, hw=hw)
+        cand,
+        estimate(
+            spec, order, blocks, elem_bytes=elem_bytes, hw=hw,
+            mesh=mesh, collective=variant.collective,
+        ),
     )
 
 
@@ -203,6 +261,8 @@ def beam_search(
     max_orders: int = 24,
     bound_slack: float = 1.25,
     stats: Optional[SearchStats] = None,
+    mesh_shape: Optional[Sequence[int]] = None,
+    mesh_variants: Optional[Sequence[MeshVariant]] = None,
 ) -> Tuple[List[ScoredCandidate], SearchStats]:
     """Enumerate-and-cut: returns the analytic top-``topk`` candidates.
 
@@ -213,6 +273,13 @@ def beam_search(
     lower bound exceeds ``slack x`` the best complete score, so candidates
     the analytic model ranks within ``slack`` of the proxy still reach
     measurement — the model is a napkin, the clock is the judge.
+
+    With ``mesh_shape`` (or an explicit ``mesh_variants`` list) the search
+    is joint over the mesh tier: every legal mesh subdivision ×collective
+    (``space.mesh_variants``) seeds its own states, all competing in the
+    same beam under the communication-aware per-device roofline.  The
+    unsharded variant stays in the space, so a mesh that does not pay for
+    its collectives loses to single-device on merit, not by fiat.
     """
     spec = spec.root()
     stats = stats if stats is not None else SearchStats()
@@ -222,35 +289,66 @@ def beam_search(
         orders, visited = candidate_orders_counted(spec, max_orders)
         stats.deduped += max(visited - len(orders), 0)
     orders = [tuple(o) for o in orders]
-    choices = choices or block_choices(spec, hw)
-    defaults = {i: spec.extents[i] for i in spec.indices}
+    if mesh_variants is None:
+        mesh_variants = enumerate_mesh_variants(spec, mesh_shape)
+    variants: List[MeshVariant] = list(mesh_variants) or [MeshVariant()]
+    stats.mesh_variants += sum(1 for v in variants if v.assignment)
+    # per-variant block choices (and whole-extent defaults) range over the
+    # per-shard local extents
+    var_choices: List[Dict[str, List[int]]] = []
+    var_defaults: List[Dict[str, int]] = []
+    for v in variants:
+        if v.assignment:
+            var_choices.append(
+                block_choices(spec, hw, mesh=v.as_dict())
+            )
+            var_defaults.append(local_extents(spec, v.as_dict()))
+        else:
+            var_choices.append(choices or block_choices(spec, hw))
+            var_defaults.append({i: spec.extents[i] for i in spec.indices})
 
     best_complete: Optional[ScoredCandidate] = None
-    for order in orders[: max(1, min(2, len(orders)))]:
-        g = _greedy_complete(spec, order, choices, elem_bytes, hw)
-        if best_complete is None or g.sort_key() < best_complete.sort_key():
-            best_complete = g
+    best_sharded: Optional[ScoredCandidate] = None
+    for vi, v in enumerate(variants):
+        for order in orders[: max(1, min(2, len(orders)))]:
+            g = _greedy_complete(
+                spec, order, var_choices[vi], elem_bytes, hw, v
+            )
+            if best_complete is None or g.sort_key() < best_complete.sort_key():
+                best_complete = g
+            if v.assignment and (
+                best_sharded is None or g.sort_key() < best_sharded.sort_key()
+            ):
+                best_sharded = g
 
-    # state = (order, blocks-so-far); one decision stage per root index.
-    # States never need mid-stage dedup: initial orders have distinct
-    # map/reduce projections and blocks-so-far distinguish the rest; orders
+    # state = (order, blocks-so-far, variant); one decision stage per root
+    # index.  States never need mid-stage dedup: initial (order, variant)
+    # pairs are distinct and blocks-so-far distinguish the rest; states
     # that converge (an index left whole) collapse at the final dedup below.
-    states: List[Tuple[Tuple[str, ...], Dict[str, int]]] = [
-        (o, {}) for o in orders
+    states: List[Tuple[Tuple[str, ...], Dict[str, int], int]] = [
+        (o, {}, vi) for vi in range(len(variants)) for o in orders
     ]
     decision_seq = spec.indices
     final: List[ScoredCandidate] = []
     for stage, index in enumerate(decision_seq):
-        extended: List[Tuple[ScoredCandidate, Tuple[str, ...], Dict[str, int]]] = []
+        extended: List[
+            Tuple[ScoredCandidate, Tuple[str, ...], Dict[str, int], int]
+        ] = []
         complete_stage = stage == len(decision_seq) - 1
-        for order, blocks in states:
-            for b in choices[index]:
+        for order, blocks, vi in states:
+            v = variants[vi]
+            mesh = v.as_dict()
+            for b in var_choices[vi][index]:
                 nb = {**blocks, index: b}
                 assigned = frozenset(nb)
-                cand = make_candidate(spec, order, {**defaults, **nb})
+                full = {**var_defaults[vi], **nb}
+                cand = make_candidate(
+                    spec, order, full, mesh=mesh, collective=v.collective
+                )
                 est = estimate(
-                    spec, order, {**defaults, **nb},
+                    spec, order, full,
                     elem_bytes=elem_bytes, hw=hw, assigned=assigned,
+                    mesh=mesh, collective=v.collective,
                 )
                 stats.considered += 1
                 sc = ScoredCandidate(cand, est)
@@ -266,19 +364,25 @@ def beam_search(
                          best_complete.cost.score)
                     )
                     continue
-                if complete_stage and (
-                    best_complete is None
-                    or sc.sort_key() < best_complete.sort_key()
-                ):
-                    best_complete = sc
-                extended.append((sc, order, nb))
+                if complete_stage:
+                    if (
+                        best_complete is None
+                        or sc.sort_key() < best_complete.sort_key()
+                    ):
+                        best_complete = sc
+                    if v.assignment and (
+                        best_sharded is None
+                        or sc.sort_key() < best_sharded.sort_key()
+                    ):
+                        best_sharded = sc
+                extended.append((sc, order, nb, vi))
         extended.sort(key=lambda t: t[0].sort_key())
         if len(extended) > beam_width:
             stats.pruned_beam += len(extended) - beam_width
             extended = extended[:beam_width]
-        states = [(order, blocks) for _, order, blocks in extended]
+        states = [(order, blocks, vi) for _, order, blocks, vi in extended]
         if complete_stage:
-            final = [sc for sc, _, _ in extended]
+            final = [sc for sc, _, _, _ in extended]
 
     if best_complete is not None:
         # the greedy seed (or a completion the trim later dropped) is a real
@@ -298,4 +402,14 @@ def beam_search(
         out.append(sc)
         if len(out) >= topk:
             break
+    # a mesh search must surface at least one sharded plan: if the beam's
+    # topk is all-unsharded (tiny problems on the analytic model), the best
+    # sharded complete candidate rides along so measurement and the plan DB
+    # still cover the mesh tier
+    if best_sharded is not None and not any(
+        sc.candidate.mesh for sc in out
+    ):
+        key = best_sharded.candidate.canonical_key()
+        if key not in seen_keys:
+            out.append(best_sharded)
     return out, stats

@@ -6,6 +6,15 @@ top-K reach this stage.  Each survivor is lowered with ``codegen.compile``
 Pallas interpreter so the loop closes on CPU-only machines — on a TPU the
 same call times the real kernel.
 
+Schedules with ``mesh:*`` levels are lowered through ``codegen.bind_mesh``
+over a real device mesh: on a multi-chip host that is the hardware mesh,
+in CI it is the ``--xla_force_host_platform_device_count``-forced CPU mesh
+(``tests/test_mesh_search.py`` and the mesh-smoke job force 8).
+``mesh_for_schedules`` builds the smallest mesh the candidate set needs
+from the visible devices, or returns None when the process cannot host it
+— in which case sharded candidates keep their analytic score and only the
+single-device ones are timed.
+
 Timing uses min-over-repeats after a warmup call (compilation is excluded),
 mirroring ``benchmarks.common.timeit``.
 """
@@ -19,7 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.enumerate import ContractionSpec
-from ..core.schedule import Schedule
+from ..core.schedule import MESH_TIERS, Schedule
 
 
 @dataclasses.dataclass
@@ -27,6 +36,51 @@ class Measurement:
     schedule: Schedule
     seconds: float
     max_err: Optional[float]  # vs einsum reference; None when skipped
+
+
+def schedule_mesh_axes(schedule: Schedule) -> Dict[str, int]:
+    """{mesh axis -> size} a schedule's mesh levels require (may be {})."""
+    out: Dict[str, int] = {}
+    for l in schedule.levels:
+        if l.tier in MESH_TIERS:
+            axis = l.tier.split(":", 1)[1]
+            out[axis] = out.get(axis, 1) * l.extent
+    return out
+
+
+def mesh_for_schedules(schedules: Sequence[Schedule]):
+    """The smallest debug mesh hosting every sharded schedule, or None.
+
+    Every schedule that uses a mesh axis must use the whole axis (that is
+    what ``space.mesh_variants`` emits — an axis is either assigned to an
+    index at its full size or left unused/replicated), so conflicting
+    sizes for one axis are a caller bug and raise.  Returns None when no
+    schedule has mesh levels or the process has too few devices (run
+    under ``--xla_force_host_platform_device_count`` to force more).
+    """
+    need: Dict[str, int] = {}
+    for s in schedules:
+        for axis, size in schedule_mesh_axes(s).items():
+            if need.setdefault(axis, size) != size:
+                raise ValueError(
+                    f"schedules disagree on mesh axis {axis!r} size: "
+                    f"{need[axis]} vs {size}"
+                )
+    if not need:
+        return None
+    import math as _math
+
+    import jax
+
+    from ..launch.mesh import make_debug_mesh
+
+    # canonical axis order (pod, data, model) per core.schedule.MESH_TIERS
+    order = [t.split(":", 1)[1] for t in MESH_TIERS]
+    axes = tuple(a for a in order if a in need)
+    shape = tuple(need[a] for a in axes)
+    if _math.prod(shape) > jax.device_count():
+        return None
+    return make_debug_mesh(shape, axes)
 
 
 def reference_arrays(
@@ -66,6 +120,8 @@ def measure_schedules(
     repeats: int = 2,
     check: bool = True,
     tol: Optional[float] = None,
+    mesh=None,
+    collectives: Optional[Sequence[str]] = None,
 ) -> List[Measurement]:
     """Lower + time each schedule; same operand data for every candidate.
 
@@ -75,6 +131,14 @@ def measure_schedules(
     dtype-appropriate: 1e-3 relative for >= 32-bit floats, 5e-2 for
     half-precision (bf16/f16 round the *stored* output even though the
     generated kernels accumulate in f32).
+
+    Schedules with ``mesh:*`` levels lower through ``codegen.bind_mesh``
+    over ``mesh`` (default: ``mesh_for_schedules`` over the visible
+    devices; a sharded schedule with no hostable mesh raises).
+    ``collectives`` optionally names the finishing-collective lowering per
+    schedule (``"psum"``/``"ring"``, ignored for unsharded entries); the
+    operands stay global arrays either way, so the oracle check is
+    identical for sharded and single-device candidates.
     """
     import jax.numpy as jnp
 
@@ -87,10 +151,24 @@ def measure_schedules(
         arrays = reference_arrays(spec, dtype=dtype)
     jarrs = tuple(jnp.asarray(arrays[n]) for n in spec.operands)
     ref = einsum_reference(spec, arrays) if check else None
+    if mesh is None:
+        mesh = mesh_for_schedules(schedules)
 
     out: List[Measurement] = []
-    for sched in schedules:
-        kern = cached_compile(spec, sched, interpret=interpret)
+    for pos, sched in enumerate(schedules):
+        sharded = bool(schedule_mesh_axes(sched))
+        if sharded and mesh is None:
+            raise ValueError(
+                f"schedule {sched.levels} needs a device mesh but none is "
+                f"available (devices visible: see jax.device_count(); force "
+                f"more with --xla_force_host_platform_device_count)"
+            )
+        coll = (collectives[pos] if collectives else "") or "psum"
+        kern = cached_compile(
+            spec, sched, interpret=interpret,
+            mesh=mesh if sharded else None,
+            collective=coll,
+        )
         result = np.asarray(kern(*jarrs))  # warmup (compile + first run)
         err = None
         if check:

@@ -17,7 +17,7 @@ they are disjoint from autotune keys even if the files are merged by hand.
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,23 +30,40 @@ from ..codegen.cache import (
 from ..core.enumerate import ContractionSpec
 from ..core.schedule import Schedule
 
-#: bump when the ranked-entry layout changes
-PLAN_VERSION = 1
+#: bump when the ranked-entry layout changes.
+#: v2 (mesh tier): keys gained a ``mesh`` qualifier (None for
+#: single-device plans, '2x4'-style for sharded ones) and ranked entries
+#: an optional ``collective`` field naming the finishing-reduction
+#: lowering.  Every v1 key goes cold on upgrade — deliberate: v1 ladders
+#: carry no mesh provenance, so a sharded fleet could have picked up a
+#: single-device plan for a mesh-qualified lookup (or vice versa).
+#: Re-sweeping (``scripts/search_sweep.py``) rebuilds the DB; the golden
+#: fixture ``tests/data/plan_db_golden.json`` was regenerated alongside.
+PLAN_VERSION = 2
 
 
 def plan_key(
-    spec: ContractionSpec, dtype: Any, hardware: Optional[str] = None
+    spec: ContractionSpec,
+    dtype: Any,
+    hardware: Optional[str] = None,
+    mesh: Optional[str] = None,
 ) -> str:
+    """Plan-DB key; ``mesh`` is a ``search.space.mesh_descriptor`` string
+    ('2x4') qualifying sharded ladders — conceptually ``matmul@mesh=2x4``
+    — so one fleet DB serves single-device and mesh plans side by side."""
     return cache_key(
         spec,
         dtype=np.dtype(dtype),
         hardware=hardware,
-        extra={"what": "search.plan", "v": PLAN_VERSION},
+        extra={"what": "search.plan", "v": PLAN_VERSION, "mesh": mesh},
     )
 
 
 def grad_plan_keys(
-    spec: ContractionSpec, dtype: Any, hardware: Optional[str] = None
+    spec: ContractionSpec,
+    dtype: Any,
+    hardware: Optional[str] = None,
+    mesh: Optional[str] = None,
 ) -> Dict[str, str]:
     """Plan keys of a forward spec's derived backward specs.
 
@@ -58,7 +75,7 @@ def grad_plan_keys(
     from ..grad import derived_specs
 
     return {
-        wrt: plan_key(d, dtype, hardware)
+        wrt: plan_key(d, dtype, hardware, mesh=mesh)
         for wrt, d in derived_specs(spec).items()
     }
 
@@ -86,15 +103,19 @@ class PlanDB:
         ranked: List[Dict[str, Any]],
         stats: Optional[Dict[str, int]] = None,
         hardware: Optional[str] = None,
+        mesh: Optional[str] = None,
     ) -> str:
         """Store ranked entries (best first). Each entry must carry a
         ``schedule`` dict from ``schedule_to_dict``; score/measured_s/
-        lower_bound/source ride along verbatim."""
-        key = plan_key(spec, dtype, hardware)
+        lower_bound/collective/source ride along verbatim.  ``mesh`` is
+        the shape descriptor ('2x4') for a mesh-tier sweep, None for
+        single-device ladders."""
+        key = plan_key(spec, dtype, hardware, mesh=mesh)
         self._cache.put(
             key,
             {
                 "v": PLAN_VERSION,
+                "mesh": mesh,
                 "ranked": ranked,
                 "stats": stats or {},
             },
@@ -104,12 +125,14 @@ class PlanDB:
     def get(
         self, spec: ContractionSpec, dtype: Any,
         hardware: Optional[str] = None,
+        mesh: Optional[str] = None,
     ) -> Optional[Dict[str, Any]]:
-        return self._cache.get(plan_key(spec, dtype, hardware))
+        return self._cache.get(plan_key(spec, dtype, hardware, mesh=mesh))
 
     def best_schedule(
         self, spec: ContractionSpec, dtype: Any,
         hardware: Optional[str] = None,
+        mesh: Optional[str] = None,
     ) -> Optional[Schedule]:
         """The stored winner, deserialized and validated — or None.
 
@@ -117,15 +140,57 @@ class PlanDB:
         change) degrades to a miss, never an error: callers fall back to
         ``codegen.tune_schedule``.
         """
-        entry = self.get(spec, dtype, hardware)
+        sched, _ = self.best_entry(spec, dtype, hardware, mesh=mesh)
+        return sched
+
+    def best_entry(
+        self, spec: ContractionSpec, dtype: Any,
+        hardware: Optional[str] = None,
+        mesh: Optional[str] = None,
+    ) -> Tuple[Optional[Schedule], Dict[str, Any]]:
+        """(winner schedule, its raw entry dict) — or (None, {}).
+
+        The entry dict carries the plan metadata the schedule alone cannot
+        (notably ``collective`` — the finishing-reduction strategy a
+        mesh-sharded plan was measured with, which ``ops._tuned_kernel``
+        forwards to ``bind_mesh``).
+        """
+        entry = self.get(spec, dtype, hardware, mesh=mesh)
         if not entry or not entry.get("ranked"):
-            return None
+            return None, {}
         try:
-            return schedule_from_dict(
-                entry["ranked"][0]["schedule"], spec.root()
-            )
+            rung = entry["ranked"][0]
+            return schedule_from_dict(rung["schedule"], spec.root()), rung
         except Exception:
-            return None
+            return None, {}
+
+    def best_sharded_entry(
+        self, spec: ContractionSpec, dtype: Any,
+        hardware: Optional[str] = None,
+        mesh: Optional[str] = None,
+    ) -> Tuple[Optional[Schedule], Dict[str, Any]]:
+        """The best rung with ``mesh:*`` levels, or (None, {}).
+
+        A mesh-qualified ladder keeps the single-device plans as
+        reference rungs (they often out-measure shard_map on the CPU
+        harness), but a caller running *under a live mesh* wants the best
+        plan that actually distributes — its operands are sharded and a
+        single-device kernel would force a gather.  This is the lookup
+        ``ops._mesh_plan_kernel`` performs.
+        """
+        entry = self.get(spec, dtype, hardware, mesh=mesh)
+        if not entry or not entry.get("ranked"):
+            return None, {}
+        from ..core.schedule import MESH_TIERS
+
+        for rung in entry["ranked"]:
+            try:
+                sched = schedule_from_dict(rung["schedule"], spec.root())
+            except Exception:
+                continue
+            if any(l.tier in MESH_TIERS for l in sched.levels):
+                return sched, rung
+        return None, {}
 
     def clear(self) -> None:
         self._cache.clear()
@@ -153,6 +218,7 @@ def entry_from(
     fits_vmem: bool,
     measured_s: Optional[float] = None,
     source: str = "search",
+    collective: str = "",
 ) -> Dict[str, Any]:
     return {
         "schedule": schedule_to_dict(schedule),
@@ -161,4 +227,5 @@ def entry_from(
         "fits_vmem": bool(fits_vmem),
         "measured_s": None if measured_s is None else float(measured_s),
         "source": source,
+        "collective": collective,
     }

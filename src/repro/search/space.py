@@ -9,6 +9,17 @@ root index — exactly the information a ``core.schedule.Schedule`` needs:
   * a reduce index chunked at ``b < extent`` -> ``seq`` level + ``mxu`` leaf
   * a reduce index left whole                -> contracted in one dot
 
+The **mesh tier** sits above all of that: a ``MeshVariant`` assigns each
+axis of the active device mesh to (at most) one root index, sharding it
+before the grid/seq/mxu blocking applies — the paper's subdivision rule
+bound to "clusters and devices" instead of grid steps.  Sharding a *map*
+index partitions operands and output; sharding a *reduce* index makes each
+device compute a partial contraction finished by a collective, whose
+lowering (``psum`` vs the ring-overlap form) is itself part of the variant
+(``Candidate.collective``).  ``mesh_variants`` enumerates the legal
+factorizations of a mesh shape over the root indices; block choices then
+range over the per-shard *local* extents.
+
 Many SJT orders realize the *same* generated kernel: only the relative order
 of blocked map indices (the Pallas grid dims) and of chunked reduce indices
 (the in-kernel fori_loop nest) survives lowering.  ``canonical_key`` projects
@@ -19,11 +30,154 @@ the exchange rules prove equivalent (see ``core.rules`` eq 36-43).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.enumerate import ContractionSpec, variant_orders
-from ..core.schedule import Level, Schedule
+from ..core.schedule import MESH_TIERS, Level, Schedule
+
+#: outermost-first mesh axis names, matching ``core.schedule.MESH_TIERS``
+MESH_AXIS_ORDER = tuple(t.split(":", 1)[1] for t in MESH_TIERS)
+
+#: collective lowerings a sharded reduction can choose between
+#: (``codegen.mesh_gen.bind_mesh(collective=...)``)
+COLLECTIVES = ("psum", "ring")
+
+#: assignment: sorted ``(root index, (mesh axis, shards))`` pairs
+MeshAssignment = Tuple[Tuple[str, Tuple[str, int]], ...]
+
+
+def mesh_axis_names(ndim: int) -> Tuple[str, ...]:
+    """Axis-name convention for an ``ndim``-dimensional mesh shape.
+
+    Matches ``launch.mesh``: 2-D meshes are (data, model), 3-D adds the
+    leading pod axis; a 1-D mesh is a plain data ring.
+    """
+    if ndim == 1:
+        return ("data",)
+    if ndim == 2:
+        return ("data", "model")
+    if ndim == 3:
+        return ("pod", "data", "model")
+    raise ValueError(f"mesh shapes have 1-3 axes, got {ndim}")
+
+
+def parse_mesh_shape(text: str) -> Tuple[int, ...]:
+    """'2x4' -> (2, 4) — the ``--mesh`` CLI syntax."""
+    try:
+        shape = tuple(int(p) for p in str(text).lower().split("x"))
+    except ValueError:
+        raise ValueError(f"mesh shape must look like '2x4', got {text!r}")
+    if not shape or any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape must be positive, got {text!r}")
+    mesh_axis_names(len(shape))  # validates the rank
+    return shape
+
+
+def mesh_descriptor(shape: Optional[Sequence[int]]) -> Optional[str]:
+    """Canonical plan-key qualifier: (2, 4) -> '2x4', None/all-1 -> None."""
+    if shape is None:
+        return None
+    shape = tuple(int(s) for s in shape)
+    if all(s == 1 for s in shape):
+        return None
+    return "x".join(str(s) for s in shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshVariant:
+    """One legal mesh subdivision: axis->index assignment + collective.
+
+    ``assignment`` is empty for the unsharded variant.  ``collective`` is
+    ``""`` unless a reduce index is sharded, in which case it names the
+    lowering of the finishing reduction (one of ``COLLECTIVES``).
+    """
+
+    assignment: MeshAssignment = ()
+    collective: str = ""
+
+    @property
+    def shards(self) -> int:
+        out = 1
+        for _, (_, n) in self.assignment:
+            out *= n
+        return out
+
+    def as_dict(self) -> Dict[str, Tuple[str, int]]:
+        return dict(self.assignment)
+
+
+def local_extents(
+    spec: ContractionSpec, mesh: Optional[Dict[str, Tuple[str, int]]]
+) -> Dict[str, int]:
+    """Per-shard extents after the mesh subdivision (root extents sans mesh)."""
+    spec = spec.root()
+    mesh = mesh or {}
+    out = {}
+    for i in spec.indices:
+        n = mesh[i][1] if i in mesh else 1
+        out[i] = spec.extents[i] // n
+    return out
+
+
+def mesh_variants(
+    spec: ContractionSpec,
+    mesh_shape: Optional[Sequence[int]],
+    *,
+    include_unsharded: bool = True,
+) -> List[MeshVariant]:
+    """Enumerate legal mesh subdivisions of ``spec`` over ``mesh_shape``.
+
+    Per mesh axis the options are: leave it unused (the computation is
+    replicated over that axis) or shard any root index whose extent it
+    divides; axes shard *distinct* indices (one mesh level per root index,
+    the shape ``codegen.plan`` lowers).  Variants that shard a reduce
+    index fan out once per collective lowering (``COLLECTIVES``) — the
+    paper's "choose the variant" applied to the finishing collective
+    itself.  Deduplication: assignments are canonical (sorted pairs), so
+    distinct MeshVariants are distinct subdivisions.
+    """
+    spec = spec.root()
+    if mesh_shape is None:
+        return [MeshVariant()] if include_unsharded else []
+    axes = [
+        (name, int(size))
+        for name, size in zip(mesh_axis_names(len(mesh_shape)), mesh_shape)
+        if int(size) > 1
+    ]
+    if not axes:
+        return [MeshVariant()] if include_unsharded else []
+    per_axis: List[List[Optional[str]]] = [
+        [None]
+        + [i for i in spec.indices if spec.extents[i] % size == 0]
+        for _, size in axes
+    ]
+    out: List[MeshVariant] = []
+    for combo in itertools.product(*per_axis):
+        chosen = [c for c in combo if c is not None]
+        if len(set(chosen)) != len(chosen):  # two axes on one index
+            continue
+        if not chosen and not include_unsharded:
+            continue
+        assignment = tuple(sorted(
+            (idx, (axes[a][0], axes[a][1]))
+            for a, idx in enumerate(combo)
+            if idx is not None
+        ))
+        if not assignment:
+            out.append(MeshVariant())
+            continue
+        sharded_reduce = any(
+            idx not in spec.output for idx, _ in assignment
+        )
+        if sharded_reduce:
+            out.extend(
+                MeshVariant(assignment, coll) for coll in COLLECTIVES
+            )
+        else:
+            out.append(MeshVariant(assignment))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,35 +185,47 @@ class Candidate:
     """One point of the search space, in root-index terms.
 
     ``blocks`` maps every root index to its per-grid-step (map) or
-    per-seq-step (reduce) extent; an index mapped to its full extent has no
-    grid/seq level.  ``order`` is the loop nest outermost-first.
+    per-seq-step (reduce) extent **within the local shard**; an index
+    mapped to its full local extent has no grid/seq level.  ``order`` is
+    the loop nest outermost-first.  ``mesh`` is the mesh subdivision
+    (empty = single-device) and ``collective`` the lowering of a sharded
+    reduction, if any.
     """
 
     spec: ContractionSpec
     order: Tuple[str, ...]
     blocks: Tuple[Tuple[str, int], ...]  # sorted (index, block) pairs
+    mesh: MeshAssignment = ()
+    collective: str = ""
 
     @property
     def block_dict(self) -> Dict[str, int]:
         return dict(self.blocks)
 
+    @property
+    def mesh_dict(self) -> Dict[str, Tuple[str, int]]:
+        return dict(self.mesh)
+
+    def _local(self) -> Dict[str, int]:
+        return local_extents(self.spec, self.mesh_dict)
+
     def grid_order(self) -> Tuple[str, ...]:
-        b = self.block_dict
+        b, loc = self.block_dict, self._local()
         return tuple(
             i for i in self.order
-            if i in self.spec.output and b.get(i, self.spec.extents[i]) < self.spec.extents[i]
+            if i in self.spec.output and b.get(i, loc[i]) < loc[i]
         )
 
     def seq_order(self) -> Tuple[str, ...]:
-        b = self.block_dict
+        b, loc = self.block_dict, self._local()
         return tuple(
             i for i in self.order
-            if i not in self.spec.output
-            and b.get(i, self.spec.extents[i]) < self.spec.extents[i]
+            if i not in self.spec.output and b.get(i, loc[i]) < loc[i]
         )
 
     def canonical_key(self) -> str:
-        """Identity after lowering: grid order, seq order, block sizes."""
+        """Identity after lowering: mesh assignment + collective, grid
+        order, seq order, block sizes."""
         return json.dumps(
             {
                 "grid": list(self.grid_order()),
@@ -67,64 +233,107 @@ class Candidate:
                 "blocks": sorted(
                     (i, int(b)) for i, b in self.blocks
                 ),
+                "mesh": sorted(
+                    (i, a, int(n)) for i, (a, n) in self.mesh
+                ),
+                "collective": self.collective,
             },
             sort_keys=True,
             separators=(",", ":"),
         )
 
     def to_schedule(self) -> Schedule:
-        return candidate_schedule(self.spec, self.order, self.block_dict)
+        return candidate_schedule(
+            self.spec, self.order, self.block_dict, mesh=self.mesh_dict
+        )
 
 
 def make_candidate(
-    spec: ContractionSpec, order: Sequence[str], blocks: Dict[str, int]
+    spec: ContractionSpec,
+    order: Sequence[str],
+    blocks: Dict[str, int],
+    mesh: Optional[Dict[str, Tuple[str, int]]] = None,
+    collective: str = "",
 ) -> Candidate:
     spec = spec.root()
-    full = {i: int(blocks.get(i, spec.extents[i])) for i in spec.indices}
+    mesh = dict(mesh or {})
+    loc = local_extents(spec, mesh)
+    full = {i: int(blocks.get(i, loc[i])) for i in spec.indices}
     return Candidate(
         spec=spec,
         order=tuple(order),
         blocks=tuple(sorted(full.items())),
+        mesh=tuple(sorted(mesh.items())),
+        collective=collective,
     )
 
 
 def candidate_schedule(
-    spec: ContractionSpec, order: Sequence[str], blocks: Dict[str, int]
+    spec: ContractionSpec,
+    order: Sequence[str],
+    blocks: Dict[str, int],
+    mesh: Optional[Dict[str, Tuple[str, int]]] = None,
 ) -> Schedule:
     """Build the Schedule a candidate denotes.
 
     Same leaf structure as ``codegen.schedules.default_schedule`` but the
     grid and seq levels are emitted in loop-``order`` (default_schedule
     always uses ``spec.indices`` order), so the search can rank grid-dim
-    and reduction-nest orders, not just block shapes.
+    and reduction-nest orders, not just block shapes.  ``mesh`` shards
+    root indices over mesh axes *before* the inner blocking (the
+    ``sharded_schedule`` shape); ``blocks`` then tile the per-shard local
+    extents.
     """
     spec = spec.root()
     order = tuple(order)
     if set(order) != set(spec.indices):
         raise ValueError(f"order {order} != indices {spec.indices}")
+    mesh = dict(mesh or {})
+    rank = {a: r for r, a in enumerate(MESH_AXIS_ORDER)}
     s = spec
+    mesh_levels: List[Level] = []
+    renamed: Dict[str, str] = {}
+    for index, (axis, n) in sorted(
+        mesh.items(), key=lambda kv: rank.get(kv[1][0], len(rank))
+    ):
+        if axis not in MESH_AXIS_ORDER:
+            raise ValueError(
+                f"unknown mesh axis {axis!r} (want {MESH_AXIS_ORDER})"
+            )
+        extent = spec.extents[index]
+        if n <= 0 or extent % n:
+            raise ValueError(
+                f"{n} shards do not divide extent {extent} of {index}"
+            )
+        if n == 1:
+            continue
+        s = s.subdivide(index, extent // n)
+        mesh_levels.append(Level(index + "o", f"mesh:{axis}", n))
+        renamed[index] = index + "i"
+    loc = local_extents(spec, mesh)
     grid: List[Level] = []
     seq: List[Level] = []
     mxu: List[Level] = []
     for index in order:
-        extent = spec.extents[index]
+        extent = loc[index]
+        name = renamed.get(index, index)
         b = int(blocks.get(index, extent))
         if not 1 <= b <= extent or extent % b:
             raise ValueError(
-                f"block {b} does not divide extent {extent} of {index}"
+                f"block {b} does not divide local extent {extent} of {index}"
             )
         if b == extent:
-            mxu.append(Level(index, "mxu", extent))
+            mxu.append(Level(name, "mxu", extent))
             continue
-        s = s.subdivide(index, b)
+        s = s.subdivide(name, b)
         outer = Level(
-            index + "o",
+            name + "o",
             "grid" if index in spec.output else "seq",
             extent // b,
         )
         (grid if index in spec.output else seq).append(outer)
-        mxu.append(Level(index + "i", "mxu", b))
-    return Schedule(s, tuple(grid + seq + mxu)).validate()
+        mxu.append(Level(name + "i", "mxu", b))
+    return Schedule(s, tuple(mesh_levels + grid + seq + mxu)).validate()
 
 
 def sweep_specs(
@@ -198,14 +407,21 @@ def seq_chunk_choices(extent: int, hw: dict, cap: int = 512) -> List[int]:
 
 
 def block_choices(
-    spec: ContractionSpec, hw: dict, per_index: int = 6
+    spec: ContractionSpec,
+    hw: dict,
+    per_index: int = 6,
+    mesh: Optional[Dict[str, Tuple[str, int]]] = None,
 ) -> Dict[str, List[int]]:
+    """Per-root-index block choices; with ``mesh`` the choices range over
+    the per-shard *local* extents (the extents the generated kernel sees
+    inside ``shard_map``)."""
     spec = spec.root()
+    loc = local_extents(spec, mesh)
     return {
         i: (
-            map_block_choices(spec.extents[i], hw, per_index)
+            map_block_choices(loc[i], hw, per_index)
             if i in spec.output
-            else seq_chunk_choices(spec.extents[i], hw)
+            else seq_chunk_choices(loc[i], hw)
         )
         for i in spec.indices
     }

@@ -13,13 +13,23 @@ too.  ``import hypothesis; hypothesis.__is_repro_fallback__`` tells the two
 apart; ``REPRO_PROPERTY_EXAMPLES`` caps example counts.
 
 Also puts ``src/`` on sys.path so ``python -m pytest`` works without
-PYTHONPATH gymnastics.
+PYTHONPATH gymnastics, and provides the shared ``forced_devices`` fixture:
+device-count-sensitive tests (meshes, shard_map collectives, the mesh-tier
+differential matrix) run their payload in a subprocess under
+``--xla_force_host_platform_device_count=N`` so the main pytest process
+keeps its single-device view (per the dry-run contract: only dryrun.py
+forces 512 devices).  Used by ``tests/test_launch.py`` and
+``tests/test_mesh_search.py``.
 """
 
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
+import textwrap
+
+import pytest
 
 _HERE = os.path.dirname(__file__)
 _SRC = os.path.join(_HERE, "..", "src")
@@ -41,3 +51,34 @@ except ImportError:
 
     sys.modules["hypothesis"] = _property_engine  # type: ignore[assignment]
     sys.modules["hypothesis.strategies"] = _property_engine.strategies
+
+
+def run_forced_devices(code: str, devices: int = 8, timeout: int = 600,
+                       env_extra: dict = None) -> str:
+    """Run ``code`` in a subprocess with ``devices`` forced CPU devices.
+
+    Returns the subprocess stdout; a non-zero exit fails the calling test
+    with both streams attached.  ``env_extra`` lets a caller isolate
+    caches (``REPRO_PLAN_DB`` etc.) per test.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}"
+    )
+    env["PYTHONPATH"] = os.path.abspath(_SRC)
+    if env_extra:
+        env.update(env_extra)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert out.returncode == 0, (
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    )
+    return out.stdout
+
+
+@pytest.fixture
+def forced_devices():
+    """``forced_devices(code, devices=8, timeout=600)`` subprocess runner."""
+    return run_forced_devices

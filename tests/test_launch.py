@@ -1,34 +1,13 @@
 """Launch-layer tests.
 
 Device-count-sensitive pieces (meshes, shard_map collectives, lower+compile)
-run in subprocesses with ``--xla_force_host_platform_device_count`` so the
-main pytest process keeps its single-device view (per the dry-run contract:
+run through the shared ``forced_devices`` fixture (``tests/conftest.py``):
+a subprocess under ``--xla_force_host_platform_device_count`` so the main
+pytest process keeps its single-device view (per the dry-run contract:
 only dryrun.py forces 512 devices).
 """
 
-import json
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={devices}"
-    )
-    env["PYTHONPATH"] = SRC
-    out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, env=env, timeout=timeout,
-    )
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
 
 
 # -- pure unit tests (no devices) ---------------------------------------------
@@ -97,10 +76,10 @@ def test_roofline_terms_math():
 # -- subprocess tests (multi-device) -------------------------------------------
 
 
-def test_debug_mesh_train_bundle_compiles():
+def test_debug_mesh_train_bundle_compiles(forced_devices):
     """A smoke-scale arch lowers+compiles on a 2x2 mesh with the same
     sharding machinery as the production dry-run."""
-    out = run_py("""
+    out = forced_devices("""
         import jax
         from repro.configs import get_config
         from repro.launch.mesh import make_debug_mesh
@@ -125,8 +104,8 @@ def test_debug_mesh_train_bundle_compiles():
     assert "OK" in out
 
 
-def test_debug_mesh_serve_bundle_compiles():
-    out = run_py("""
+def test_debug_mesh_serve_bundle_compiles(forced_devices):
+    out = forced_devices("""
         import jax
         from repro.configs import get_config
         from repro.launch.mesh import make_debug_mesh
@@ -147,10 +126,10 @@ def test_debug_mesh_serve_bundle_compiles():
     assert "OK" in out
 
 
-def test_train_step_runs_on_mesh_and_loss_decreases():
+def test_train_step_runs_on_mesh_and_loss_decreases(forced_devices):
     """End-to-end: real data -> sharded train_step on a 4-device mesh; the
     loss must fall (integration of models+optim+sharding+data)."""
-    out = run_py("""
+    out = forced_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
         from repro.launch.mesh import make_debug_mesh
@@ -183,10 +162,10 @@ def test_train_step_runs_on_mesh_and_loss_decreases():
     assert "OK" in out
 
 
-def test_hierarchical_compressed_psum():
+def test_hierarchical_compressed_psum(forced_devices):
     """shard_map int8 cross-pod gradient reduction on a (2,4) pod x data
     mesh: result within quantization error of the exact psum."""
-    out = run_py("""
+    out = forced_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
@@ -217,46 +196,86 @@ def test_hierarchical_compressed_psum():
     assert "OK" in out
 
 
-def test_ring_collective_matmul_overlap():
-    """ppermute-pipelined gather-matmul == blocking all-gather matmul."""
-    out = run_py("""
+@pytest.mark.parametrize("devices", [2, 4, 8])
+def test_ring_collective_matmul_property(forced_devices, devices):
+    """Property: ring_gather_matmul == naive_gather_matmul == unsharded
+    oracle for seeded-random shard counts and shapes, plus the
+    codegen-integrated ring lowering (``codegen.collectives.ring_psum``,
+    what a searched plan with ``collective=ring`` executes): ring psum ==
+    lax.psum == the unsharded sum, including the ``p == 1`` cut path and
+    payloads that leave a remainder shard (padding path)."""
+    out = forced_devices("""
         import jax, jax.numpy as jnp, numpy as np
+        from jax import lax
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.launch.mesh import make_debug_mesh
+        from repro.codegen.collectives import ring_psum
         from repro.launch.overlap import naive_gather_matmul, ring_gather_matmul
 
-        mesh = make_debug_mesh((4,), ("model",))
-        m, k, n = 16, 8, 12
-        rng = np.random.default_rng(0)
-        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        P_TOTAL = jax.device_count()
+        rng = np.random.default_rng(100 + P_TOTAL)
+        checked_hlo = False
+        for case in range(4):
+            # random shard count dividing the device pool, random shapes
+            ps = [p for p in (1, 2, 4, 8) if P_TOTAL % p == 0 and p <= P_TOTAL]
+            # case 0 pins the p == 1 cut path; the rest draw randomly
+            p = 1 if case == 0 else int(rng.choice(ps))
+            m_loc = int(rng.integers(1, 5))
+            k = int(rng.integers(1, 9))
+            n = int(rng.integers(1, 9))
+            m = p * m_loc
+            mesh = make_debug_mesh((p,), ("model",))
+            x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+            w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
 
-        ring = shard_map(
-            lambda xs, ws: ring_gather_matmul(xs, ws, "model"),
-            mesh=mesh, in_specs=(P("model", None), P()),
-            out_specs=P(), check_rep=False,
-        )
-        naive = shard_map(
-            lambda xs, ws: naive_gather_matmul(xs, ws, "model"),
-            mesh=mesh, in_specs=(P("model", None), P()),
-            out_specs=P(), check_rep=False,
-        )
-        got, want = np.asarray(ring(x, w)), np.asarray(naive(x, w))
-        ref = np.asarray(x) @ np.asarray(w)
-        np.testing.assert_allclose(want, ref, rtol=1e-5)
-        np.testing.assert_allclose(got, ref, rtol=1e-5)
-        # the ring variant must contain collective-permutes, not all-gathers
-        hlo = jax.jit(ring).lower(x, w).compile().as_text()
-        assert "collective-permute" in hlo
+            ring = shard_map(
+                lambda xs, ws: ring_gather_matmul(xs, ws, "model"),
+                mesh=mesh, in_specs=(P("model", None), P()),
+                out_specs=P(), check_rep=False,
+            )
+            naive = shard_map(
+                lambda xs, ws: naive_gather_matmul(xs, ws, "model"),
+                mesh=mesh, in_specs=(P("model", None), P()),
+                out_specs=P(), check_rep=False,
+            )
+            got, want = np.asarray(ring(x, w)), np.asarray(naive(x, w))
+            ref = np.asarray(x) @ np.asarray(w)
+            np.testing.assert_allclose(want, ref, rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+            if p > 1 and not checked_hlo:
+                # the ring variant must collective-permute, not all-gather
+                hlo = jax.jit(ring).lower(x, w).compile().as_text()
+                assert "collective-permute" in hlo
+                checked_hlo = True
+
+            # codegen-integrated ring all-reduce: cut path (p == 1 above
+            # when drawn), even split, and remainder payloads
+            rows = int(rng.integers(1, 7))   # rows*cols rarely divides p
+            cols = int(rng.integers(1, 11))
+            y = jnp.asarray(
+                rng.standard_normal((p, rows, cols)), jnp.float32
+            )
+            rp = shard_map(
+                lambda v: ring_psum(v[0], "model"), mesh=mesh,
+                in_specs=P("model"), out_specs=P(), check_rep=False,
+            )
+            pp = shard_map(
+                lambda v: lax.psum(v[0], "model"), mesh=mesh,
+                in_specs=P("model"), out_specs=P(), check_rep=False,
+            )
+            got_r, want_r = np.asarray(rp(y)), np.asarray(pp(y))
+            oracle = np.asarray(y).sum(0)
+            np.testing.assert_allclose(want_r, oracle, rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(got_r, oracle, rtol=1e-4, atol=1e-5)
         print("OK")
-    """, devices=4)
+    """, devices=devices)
     assert "OK" in out
 
 
-def test_pipeline_parallelism_over_pod_axis():
+def test_pipeline_parallelism_over_pod_axis(forced_devices):
     """GPipe schedule over a 4-stage pipe axis == sequential layer stack."""
-    out = run_py("""
+    out = forced_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map

@@ -1,21 +1,29 @@
-"""Golden regression: plan-DB on-disk format, derived-grad keys included.
+"""Golden regression: plan-DB on-disk format — grad and mesh keys included.
 
 ``tests/data/plan_db_golden.json`` is a committed snapshot of the ranked
-plan database ``search_schedule`` writes (PLAN_VERSION 1, hardware
+plan database ``search_schedule`` writes (PLAN_VERSION 2, hardware
 fingerprint pinned to ``golden/fixture-hw``), mirroring
 ``tests/test_cache_golden.py`` for the PR-2/PR-3 formats.  It covers the
-forward ``matmul`` key (f32 + bf16) AND the derived backward keys
-``matmul.dA`` / ``matmul.dB`` (``grad.derive`` names), because training
-fleets share one plan DB for both sides of the tape:
+forward ``matmul`` key (f32 + bf16), the derived backward keys
+``matmul.dA`` / ``matmul.dB`` (``grad.derive`` names), AND the
+mesh-qualified keys of the distributed tier (``matmul@mesh=2x4`` fwd +
+``matmul.dA@mesh=2x4`` — the keys ``ops._mesh_plan_kernel`` looks up when
+a 2x4 mesh is active), because one fleet DB serves single-device and
+sharded plans side by side:
 
   * key derivation must keep producing the committed hex digests — a
-    silent drift would cold-start every fleet's searched plans (and
-    training's backward plans specifically, which no forward-only test
-    would catch);
+    silent drift would cold-start every fleet's searched plans (the mesh
+    keys specifically, which no single-device test would catch);
   * stored ranked entries must keep deserializing, validating and
-    round-tripping byte-identically;
-  * ``PlanDB.best_schedule`` (the exact lookup ``ops._tuned_kernel``
-    performs) must return the stored winner for every fixture key.
+    round-tripping byte-identically — mesh levels and the ``collective``
+    field included;
+  * ``PlanDB.best_schedule`` / ``best_sharded_entry`` (the exact lookups
+    ``ops._tuned_kernel`` performs) must return the stored winners.
+
+PLAN_VERSION history: v1 = PR-2/PR-3 single-device format; v2 = the mesh
+tier (this file's pin) — keys gained the ``mesh`` qualifier and rungs the
+``collective`` field; every v1 key went cold deliberately (see the
+migration note in ``search/plandb.py``).
 
 Regenerate only after a deliberate format bump (``PLAN_VERSION``):
 
@@ -27,12 +35,17 @@ Regenerate only after a deliberate format bump (``PLAN_VERSION``):
     from repro.search import PlanDB, search_schedule
     db = PlanDB("tests/data/plan_db_golden.json")
     fwd = matmul_spec(512, 512, 512); d = derived_specs(fwd)
-    for spec, dt in [(fwd, np.dtype(np.float32)),
-                     (fwd, np.dtype("bfloat16")),
-                     (d["A"], np.dtype(np.float32)),
-                     (d["B"], np.dtype(np.float32))]:
+    for spec, dt, mesh in [
+        (fwd, np.dtype(np.float32), None),
+        (fwd, np.dtype("bfloat16"), None),
+        (d["A"], np.dtype(np.float32), None),
+        (d["B"], np.dtype(np.float32), None),
+        (fwd, np.dtype(np.float32), (2, 4)),
+        (d["A"], np.dtype(np.float32), (2, 4)),
+    ]:
         search_schedule(spec, dtype=dt, beam_width=4, topk=3,
-                        measure=False, plan_db=db, use_cached_plan=False)
+                        measure=False, plan_db=db, use_cached_plan=False,
+                        mesh_shape=mesh)
 """
 
 from __future__ import annotations
@@ -47,6 +60,7 @@ import pytest
 import repro.codegen.cache as cache_mod
 from repro.codegen.cache import schedule_from_dict, schedule_to_dict
 from repro.core.enumerate import matmul_spec
+from repro.core.schedule import MESH_TIERS
 from repro.grad import derived_specs
 from repro.search import PlanDB
 from repro.search.plandb import PLAN_VERSION, grad_plan_keys, plan_key
@@ -59,11 +73,14 @@ GOLDEN_HW = "golden/fixture-hw"
 _FWD = matmul_spec(512, 512, 512)
 _D = derived_specs(_FWD)
 
+#: (label, spec, dtype, mesh descriptor)
 FIXTURE_POINTS = [
-    ("matmul-f32", _FWD, np.dtype(np.float32)),
-    ("matmul-bf16", _FWD, np.dtype("bfloat16")),
-    ("matmul.dA", _D["A"], np.dtype(np.float32)),
-    ("matmul.dB", _D["B"], np.dtype(np.float32)),
+    ("matmul-f32", _FWD, np.dtype(np.float32), None),
+    ("matmul-bf16", _FWD, np.dtype("bfloat16"), None),
+    ("matmul.dA", _D["A"], np.dtype(np.float32), None),
+    ("matmul.dB", _D["B"], np.dtype(np.float32), None),
+    ("matmul@mesh=2x4", _FWD, np.dtype(np.float32), "2x4"),
+    ("matmul.dA@mesh=2x4", _D["A"], np.dtype(np.float32), "2x4"),
 ]
 
 
@@ -75,61 +92,84 @@ def fixture_data():
 
 def test_plan_version_is_pinned():
     """Bumping PLAN_VERSION invalidates every key below — this test makes
-    sure the bump happens deliberately, fixture regenerated alongside."""
-    assert PLAN_VERSION == 1
+    sure the bump happens deliberately, fixture regenerated alongside.
+    v2 = the mesh tier (mesh-qualified keys + collective field)."""
+    assert PLAN_VERSION == 2
 
 
 def test_fixture_is_wellformed(fixture_data):
     assert len(fixture_data) == len(FIXTURE_POINTS)
+    mesh_entries = 0
     for entry in fixture_data.values():
         assert set(entry) >= {"v", "ranked", "stats"}
         assert entry["v"] == PLAN_VERSION
         assert entry["ranked"], "empty ranked ladder in fixture"
+        if entry.get("mesh"):
+            mesh_entries += 1
         for rung in entry["ranked"]:
             assert set(rung) >= {
                 "schedule", "score", "lower_bound", "fits_vmem",
-                "measured_s", "source",
+                "measured_s", "source", "collective",
             }
             assert set(rung["schedule"]) == {"splits", "levels"}
+    assert mesh_entries == 2, "mesh-qualified entries missing from fixture"
 
 
 @pytest.mark.parametrize(
-    "label,spec,dtype", FIXTURE_POINTS, ids=[p[0] for p in FIXTURE_POINTS],
+    "label,spec,dtype,mesh", FIXTURE_POINTS,
+    ids=[p[0] for p in FIXTURE_POINTS],
 )
-def test_plan_key_derivation_is_stable(fixture_data, label, spec, dtype):
-    key = plan_key(spec, dtype, hardware=GOLDEN_HW)
+def test_plan_key_derivation_is_stable(fixture_data, label, spec, dtype, mesh):
+    key = plan_key(spec, dtype, hardware=GOLDEN_HW, mesh=mesh)
     assert key in fixture_data, (
         f"plan-DB key for {label} drifted — every fleet's searched plans "
-        f"(backward included) would go cold on upgrade.  If deliberate, "
-        f"bump PLAN_VERSION and regenerate the fixture."
+        f"(mesh-qualified and backward included) would go cold on "
+        f"upgrade.  If deliberate, bump PLAN_VERSION and regenerate the "
+        f"fixture."
     )
 
 
 def test_grad_plan_keys_match_derived_fixture_keys(fixture_data):
     """grad_plan_keys (what the custom-VJP backward lookups use) must
-    address exactly the committed dA/dB entries."""
+    address exactly the committed dA/dB entries — the mesh-qualified dA
+    key too (what a backward pass under an active 2x4 mesh consults)."""
     keys = grad_plan_keys(_FWD, np.float32, hardware=GOLDEN_HW)
     assert set(keys) == {"A", "B"}
     for wrt, key in keys.items():
         assert key in fixture_data, f"derived key for d{wrt} drifted"
-    # and they are disjoint from the forward key
-    assert plan_key(_FWD, np.float32, hardware=GOLDEN_HW) not in keys.values()
+    mesh_keys = grad_plan_keys(
+        _FWD, np.float32, hardware=GOLDEN_HW, mesh="2x4"
+    )
+    assert mesh_keys["A"] in fixture_data, "mesh-qualified dA key drifted"
+    assert mesh_keys["A"] != keys["A"]
+    # and they are disjoint from the forward keys
+    fwd = plan_key(_FWD, np.float32, hardware=GOLDEN_HW)
+    fwd_mesh = plan_key(_FWD, np.float32, hardware=GOLDEN_HW, mesh="2x4")
+    assert fwd != fwd_mesh
+    assert fwd not in keys.values() and fwd_mesh not in mesh_keys.values()
 
 
 @pytest.mark.parametrize(
-    "label,spec,dtype", FIXTURE_POINTS, ids=[p[0] for p in FIXTURE_POINTS],
+    "label,spec,dtype,mesh", FIXTURE_POINTS,
+    ids=[p[0] for p in FIXTURE_POINTS],
 )
-def test_ranked_schedules_roundtrip(fixture_data, label, spec, dtype):
-    entry = fixture_data[plan_key(spec, dtype, hardware=GOLDEN_HW)]
+def test_ranked_schedules_roundtrip(fixture_data, label, spec, dtype, mesh):
+    entry = fixture_data[plan_key(spec, dtype, hardware=GOLDEN_HW, mesh=mesh)]
+    sharded_rungs = 0
     for rung in entry["ranked"]:
         sched = schedule_from_dict(rung["schedule"], spec.root())
         assert schedule_to_dict(sched) == rung["schedule"], label
         sched.validate()
+        if any(l.tier in MESH_TIERS for l in sched.levels):
+            sharded_rungs += 1
+    if mesh:
+        assert sharded_rungs >= 1, f"{label}: mesh ladder has no mesh:* rung"
 
 
 def test_best_schedule_serves_golden_winner(tmp_path, monkeypatch):
     """End to end: a fleet plan-DB file keeps serving its stored winners
-    through the exact lookup ops._tuned_kernel performs."""
+    through the exact lookups ops._tuned_kernel performs — best_schedule
+    for single-device keys, best_sharded_entry for mesh keys."""
     monkeypatch.setattr(
         cache_mod, "hardware_fingerprint", lambda: GOLDEN_HW
     )
@@ -138,8 +178,13 @@ def test_best_schedule_serves_golden_winner(tmp_path, monkeypatch):
     db = PlanDB(str(path))
     with open(FIXTURE) as f:
         data = json.load(f)
-    for label, spec, dtype in FIXTURE_POINTS:
-        sched = db.best_schedule(spec, dtype)
+    for label, spec, dtype, mesh in FIXTURE_POINTS:
+        sched = db.best_schedule(spec, dtype, mesh=mesh)
         assert sched is not None, f"{label}: plan-DB lookup missed"
-        want = data[plan_key(spec, dtype, hardware=GOLDEN_HW)]
+        want = data[plan_key(spec, dtype, hardware=GOLDEN_HW, mesh=mesh)]
         assert schedule_to_dict(sched) == want["ranked"][0]["schedule"], label
+        if mesh:
+            sharded, entry = db.best_sharded_entry(spec, dtype, mesh=mesh)
+            assert sharded is not None, f"{label}: sharded lookup missed"
+            assert any(l.tier in MESH_TIERS for l in sharded.levels)
+            assert entry.get("collective") is not None

@@ -518,6 +518,45 @@ def _bench_capture_step(smoke: bool):
     )
 
 
+@guarded("obs.overhead")
+def _bench_obs(smoke: bool):
+    """Observability overhead gate: obs-on vs obs-off on a hot kernel call.
+
+    Times the same memoized ``ops.dense`` dispatch (the serving hot path:
+    plan-DB consult + kernel-memo lookup + generated kernel) with
+    ``REPRO_OBS`` off and on.  The instrumentation on that path is a few
+    env reads and counter increments, so the min-over-repeats ratio must
+    stay <= 1.02 — ``scripts/bench_smoke.py`` gates on it, which is what
+    keeps obs safe to leave on by default in production.
+    """
+    from repro import ops
+
+    n = 128
+    x, w = _rnd(n, n, seed=0), _rnd(n, n, seed=1)
+
+    def call():
+        return np.asarray(ops.dense(x, w, interpret=True))
+
+    call()  # tune + compile once: both arms time the memoized path
+
+    prev = os.environ.get("REPRO_OBS")
+    try:
+        os.environ["REPRO_OBS"] = "0"
+        off_s = timeit(call, repeats=5, warmup=1)
+        os.environ["REPRO_OBS"] = "1"
+        on_s = timeit(call, repeats=5, warmup=1)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_OBS", None)
+        else:
+            os.environ["REPRO_OBS"] = prev
+    ratio = on_s / max(off_s, 1e-12)
+    emit(
+        "obs.overhead", on_s,
+        f"baseline_s={off_s:.3g};ratio={ratio:.3g};flops={2 * n**3}",
+    )
+
+
 def run(smoke: bool = False):
     m = n = k = 4096
     cands = [
@@ -563,6 +602,7 @@ def run(smoke: bool = False):
     _bench_grad_plandb(smoke)
     _bench_capture_sites(smoke)
     _bench_capture_step(smoke)
+    _bench_obs(smoke)
 
 
 if __name__ == "__main__":

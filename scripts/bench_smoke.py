@@ -15,7 +15,10 @@ non-zero if ANY row failed:
   * the backward GEMMs failed to pick up searched plans by derived-spec
     key (``grad.plandb`` must report ``ok=True``),
   * whole-model capture dispatched zero sites on any demo config
-    (``capture.sites.*`` must report ``dispatched>=1``).
+    (``capture.sites.*`` must report ``dispatched>=1``),
+  * observability instrumentation measurably slowed the hot dispatch path
+    (``obs.overhead`` must report ``ratio=`` <= ``OBS_OVERHEAD_MAX``; the
+    obs.* rows additionally land in ``BENCH_obs.json``).
 
 On success (and only then) the parsed rows are written to
 ``BENCH_pr3.json`` at the repo root — per-row seconds, GFLOP/s (from the
@@ -45,8 +48,12 @@ import subprocess
 import sys
 
 TOL = 1e-3
+#: observability must be free enough to stay on by default: obs-on vs
+#: obs-off timing of the same memoized dense dispatch (min-over-repeats)
+OBS_OVERHEAD_MAX = 1.02
 BENCH_JSON = "BENCH_pr3.json"
 BENCH_MESH_JSON = "BENCH_mesh.json"
+BENCH_OBS_JSON = "BENCH_obs.json"
 REQUIRED = [
     "kernel.gen.matmul",
     "kernel.gen.vs_handwritten",
@@ -63,6 +70,7 @@ REQUIRED = [
     "capture.sites.moe",
     "capture.sites.ssm",
     "capture.step",
+    "obs.overhead",
 ]
 #: required only under --mesh (the bench emits them only multi-device)
 REQUIRED_MESH = [
@@ -100,6 +108,17 @@ def check_row(name: str, derived: str) -> str:
             return "capture row missing dispatched= counter"
         if int(m.group(1)) < 1:
             return "whole-model capture dispatched zero sites"
+    if name == "obs.overhead":
+        m = re.search(r"ratio=([^;,\s]+)", derived)
+        if not m:
+            return "obs row missing ratio= field"
+        try:
+            ratio = float(m.group(1))
+        except ValueError:
+            return f"unparseable obs ratio {m.group(1)!r}"
+        if math.isnan(ratio) or ratio > OBS_OVERHEAD_MAX:
+            return (f"obs-on/obs-off ratio {ratio:.4g} > "
+                    f"{OBS_OVERHEAD_MAX} — instrumentation too hot")
     return ""
 
 
@@ -145,6 +164,36 @@ def write_bench_json(repo: str, rows: dict, out_name: str = BENCH_JSON) -> str:
             {
                 "schema": 1,
                 "source": "scripts/bench_smoke.py (kernel_bench --smoke)",
+                "rows": out,
+            },
+            f, indent=1, sort_keys=True, allow_nan=False,
+        )
+        f.write("\n")
+    return path
+
+
+def write_obs_json(repo: str, rows: dict) -> str:
+    """Persist the obs.* rows (overhead gate evidence) to BENCH_obs.json.
+
+    Unlike the perf baseline, the interesting numbers here are the
+    obs-on/obs-off ``ratio`` and the obs-off ``baseline_s`` — the record
+    that observability stayed within ``OBS_OVERHEAD_MAX`` on this commit.
+    """
+    out = {}
+    for name in sorted(rows):
+        seconds, derived = rows[name]
+        out[name] = {
+            "seconds_on": seconds if math.isfinite(seconds) else None,
+            "seconds_off": _field(derived, "baseline_s"),
+            "ratio": _field(derived, "ratio"),
+        }
+    path = os.path.join(repo, BENCH_OBS_JSON)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "schema": 1,
+                "source": "scripts/bench_smoke.py (kernel_bench --smoke)",
+                "gate_max_ratio": OBS_OVERHEAD_MAX,
                 "rows": out,
             },
             f, indent=1, sort_keys=True, allow_nan=False,
@@ -219,6 +268,10 @@ def main() -> int:
     path = write_bench_json(repo, rows, bench_json)
     print(f"\nOK: {len(rows)} rows, {len(required)} required, all healthy")
     print(f"baseline written to {path}")
+    obs_rows = {n: rows[n] for n in rows if n.startswith("obs.")}
+    if obs_rows and not args.mesh:
+        obs_path = write_obs_json(repo, obs_rows)
+        print(f"obs overhead written to {obs_path}")
     return 0
 
 

@@ -323,15 +323,28 @@ class CapturedFunction:
                 out_store["tree"] = out_tree
                 return out_flat
 
-            closed = jax.make_jaxpr(flat_fn)(*flat)
-            report = harvest_jaxpr(
-                closed, interpret=self._interpret, label=self._label,
-            )
+            from ..obs import counter, span
+
+            with span("capture.trace", label=self._label):
+                closed = jax.make_jaxpr(flat_fn)(*flat)
+            with span("capture.harvest", label=self._label):
+                report = harvest_jaxpr(
+                    closed, interpret=self._interpret, label=self._label,
+                )
             if not self._dispatch:
                 for s in report.sites:
                     if s.dispatched:
                         s.status = "fallback"
                         s.reason = "dispatch disabled (harvest-only capture)"
+            # per-signature dispatch telemetry: aggregate counts plus a
+            # per-op breakdown (capture.dispatched.dense etc.) so a fleet
+            # dump shows WHICH entry points the model's GEMMs route to
+            counter("capture.harvested").inc(report.harvested)
+            counter("capture.dispatched").inc(report.dispatched)
+            counter("capture.fallback").inc(report.fallback)
+            for s in report.sites:
+                if s.dispatched:
+                    counter(f"capture.dispatched.{s.op}").inc()
             entry = _Entry(closed, out_store["tree"], report)
             self._entries[key] = entry
         return entry, flat, in_tree

@@ -154,12 +154,15 @@ def sweep_captured(
                 )
                 n += 1
                 if verbose:
+                    from ..obs import log
+
                     best = res.best
                     t = ("-" if best.measured_s is None
                          else f"{best.measured_s * 1e3:.2f}ms")
                     at = f"@mesh={res.mesh}" if res.mesh else ""
-                    print(f"[capture-sweep] {label}/{sub_label}{at} "
-                          f"dtype={dtype} best={t} (db={db.path})")
+                    log.info("capture-sweep",
+                             f"{label}/{sub_label}{at} "
+                             f"dtype={dtype} best={t} (db={db.path})")
     return n
 
 

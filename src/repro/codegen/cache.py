@@ -21,6 +21,12 @@ A corrupt/alien file degrades to an empty cache rather than an error.
 
 Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
 ``~/.cache/repro/autotune.json``.
+
+Observability: lookups feed ``repro.obs`` counters (``autotune.hit`` /
+``autotune.miss`` for the default cache, ``plandb.*`` for the plan DB —
+see ``metrics_prefix``) in addition to the in-process ``hits``/``misses``
+attributes, so a fleet dashboard or ``serve --metrics-out`` dump shows
+cache effectiveness without poking cache objects.
 """
 
 from __future__ import annotations
@@ -136,6 +142,10 @@ class AutotuneCache:
     # -- stats, for tests and ops dashboards --------------------------------
     hits: int = 0
     misses: int = 0
+    #: when set ("autotune"/"plandb"), lookups also feed the repro.obs
+    #: counters ``<prefix>.hit`` / ``<prefix>.miss`` — bare instances used
+    #: as scratch storage in tests stay silent
+    metrics_prefix: Optional[str] = None
 
     def _load(self) -> Dict[str, Any]:
         if self._data is None:
@@ -154,7 +164,20 @@ class AutotuneCache:
             self.misses += 1
         else:
             self.hits += 1
+        if self.metrics_prefix:
+            from ..obs import counter
+
+            counter(
+                f"{self.metrics_prefix}.{'miss' if val is None else 'hit'}"
+            ).inc()
         return val
+
+    def contains(self, key: str) -> bool:
+        """Presence probe that does NOT count as a hit or a miss — used by
+        ``PlanDB`` to classify a miss as a version miss (an entry exists
+        under an older PLAN_VERSION key)."""
+        with self._lock:
+            return key in self._load()
 
     def put(self, key: str, value: Any) -> None:
         with self._lock:
@@ -200,4 +223,5 @@ def default_cache() -> AutotuneCache:
     )
     if _default is None or _default.path != path:
         _default = AutotuneCache(path)
+        _default.metrics_prefix = "autotune"
     return _default

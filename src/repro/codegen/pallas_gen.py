@@ -297,20 +297,24 @@ def compile_kernel(
         or spec.root().extents != schedule.spec.root().extents
     ):
         raise ValueError("spec and schedule disagree on the root contraction")
-    plan = build_plan(schedule)
-    kernel = CompiledKernel(
-        spec=plan.spec,
-        schedule=schedule,
-        plan=plan,
-        epilogue=epilogue,
-        out_dtype=out_dtype,
-        interpret=interpret,
-    )
-    if mesh is not None:
-        from .mesh_gen import bind_mesh
+    from ..obs import span
 
-        return bind_mesh(kernel, mesh, collective=collective)
-    return kernel
+    with span("codegen.compile", spec=spec.root().name,
+              sharded=mesh is not None):
+        plan = build_plan(schedule)
+        kernel = CompiledKernel(
+            spec=plan.spec,
+            schedule=schedule,
+            plan=plan,
+            epilogue=epilogue,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
+        if mesh is not None:
+            from .mesh_gen import bind_mesh
+
+            return bind_mesh(kernel, mesh, collective=collective)
+        return kernel
 
 
 _KERNEL_MEMO: Dict[tuple, CompiledKernel] = {}
@@ -354,7 +358,10 @@ def cached_compile(
         mesh_key,
         collective if mesh is not None else None,
     )
+    from ..obs import counter
+
     kern = _KERNEL_MEMO.get(key)
+    counter(f"codegen.memo.{'miss' if kern is None else 'hit'}").inc()
     if kern is None:
         kern = compile_kernel(
             spec,

@@ -149,6 +149,8 @@ def tune_schedule(
     analytic top-``keep`` are timed through the interpreter-mode generated
     kernel before the winner is stored.
     """
+    from ..obs import span
+
     spec = spec.root()
     if cache is None and use_default_cache:
         cache = default_cache()
@@ -173,39 +175,41 @@ def tune_schedule(
         if hit is not None:
             return schedule_from_dict(hit["schedule"], spec)
 
-    scored = []
-    for blocks in candidate_blocks(spec, hw):
-        s = _score(spec, blocks, elem, hw)
-        if s is not None:
-            steps = sum(  # tie-break: fewer seq steps = deeper chunks win
-                spec.extents[i] // blocks[i]
+    with span("codegen.tune", spec=spec.name,
+              measured=measure_with is not None):
+        scored = []
+        for blocks in candidate_blocks(spec, hw):
+            s = _score(spec, blocks, elem, hw)
+            if s is not None:
+                steps = sum(  # tie-break: fewer seq steps win
+                    spec.extents[i] // blocks[i]
+                    for i in spec.indices
+                    if i not in spec.output
+                )
+                scored.append((s, steps, tuple(sorted(blocks.items()))))
+        if not scored:  # nothing fits VMEM: fall back to smallest blocks
+            blocks = {
+                i: (1 if i in spec.output else spec.extents[i])
                 for i in spec.indices
-                if i not in spec.output
-            )
-            scored.append((s, steps, tuple(sorted(blocks.items()))))
-    if not scored:  # nothing fits VMEM: fall back to smallest blocks
-        blocks = {
-            i: (1 if i in spec.output else spec.extents[i])
-            for i in spec.indices
-        }
-        scored = [(math.inf, 0, tuple(sorted(blocks.items())))]
-    scored.sort()
-    top = [dict(b) for _, _, b in scored[:keep]]
+            }
+            scored = [(math.inf, 0, tuple(sorted(blocks.items())))]
+        scored.sort()
+        top = [dict(b) for _, _, b in scored[:keep]]
 
-    best = top[0]
-    if measure_with is not None and len(top) > 1:
-        from .pallas_gen import compile_kernel
+        best = top[0]
+        if measure_with is not None and len(top) > 1:
+            from .pallas_gen import compile_kernel
 
-        timings = []
-        for blocks in top:
-            sched = default_schedule(spec, blocks)
-            kern = compile_kernel(spec, sched, interpret=True)
-            args = tuple(measure_with[n] for n in spec.operands)
-            t0 = time.perf_counter()
-            np.asarray(kern(*args))
-            timings.append((time.perf_counter() - t0, blocks))
-        timings.sort(key=lambda t: t[0])
-        best = timings[0][1]
+            timings = []
+            for blocks in top:
+                sched = default_schedule(spec, blocks)
+                kern = compile_kernel(spec, sched, interpret=True)
+                args = tuple(measure_with[n] for n in spec.operands)
+                t0 = time.perf_counter()
+                np.asarray(kern(*args))
+                timings.append((time.perf_counter() - t0, blocks))
+            timings.sort(key=lambda t: t[0])
+            best = timings[0][1]
 
     schedule = default_schedule(spec, best)
     if cache is not None:

@@ -1,10 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS_EXTRA", "")
-)
-
 """§Perf harness: compile ONE cell under a named knob combination and report
 the roofline-term deltas against the baseline record.
 
@@ -18,10 +11,16 @@ Knobs (combinable via --knob a,b):
 Usage:
   PYTHONPATH=src python -m repro.launch.perf --arch qwen2-72b \
       --shape train_4k --knob zero1 --out results_perf
+
+Environment: the 512-device ``XLA_FLAGS`` forcing lives in ``main()``
+(before the deferred ``dryrun`` import initializes jax) — merely importing
+this module must not mutate process state, per the dry-run contract that
+only the perf/dryrun *entry points* force devices.
 """
 
 import argparse
 import json
+import os
 
 _KNOB_ENV = {
     "baseline": {},
@@ -45,6 +44,14 @@ def main():
     ap.add_argument("--out", default="results_perf")
     ap.add_argument("--baseline-dir", default="results")
     args = ap.parse_args()
+
+    # the dry-run device forcing — set here, not at import time, so that
+    # importing repro.launch.perf (tests, docs builds) leaves XLA_FLAGS
+    # alone; run_cell is imported after this takes effect
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS_EXTRA", "")
+    )
 
     knobs = args.knob.split(",")
     for k in knobs:

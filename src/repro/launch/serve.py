@@ -7,6 +7,15 @@ production mesh the cache shardings come from launch.steps.serve_bundle.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 8 --prompt-len 32 --max-new 16
+
+Observability (``repro.obs``): prefill and every decode step run inside
+trace spans, each finished request records into the
+``serve.request_latency_s`` histogram (p50/p99 in the metrics dump), and
+``serve.tokens``/``serve.tok_per_s`` plus the plan-DB/autotune hit
+counters quantify how much of the traffic ran searched kernels.
+``--metrics-out FILE`` / ``--trace-out FILE`` write the registry snapshot
+and the Chrome trace after the run; ``scripts/obs_report.py`` renders
+both.  Log lines go through ``obs.log`` (``REPRO_LOG=quiet|info|debug``).
 """
 
 from __future__ import annotations
@@ -20,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..configs import get_config
 from ..models.api import get_api
+from ..obs import log
 
 
 @dataclasses.dataclass
@@ -65,9 +76,9 @@ class BatchServer:
                     self.mesh_shape, mesh_axis_names(len(self.mesh_shape))
                 )
             else:
-                print(f"[serve] --mesh {mesh_shape}: only "
-                      f"{jax.device_count()} device(s) visible — sweeping "
-                      f"mesh plans for the fleet, serving single-device")
+                log.info("serve", f"--mesh {mesh_shape}: only "
+                         f"{jax.device_count()} device(s) visible — sweeping "
+                         f"mesh plans for the fleet, serving single-device")
         # Whole-model capture: harvest the prefill + decode GEMM sets
         # (abstract trace — no allocation), sweep every harvested spec
         # into the ranked plan DB (fwd, plus derived bwd specs unless
@@ -90,7 +101,7 @@ class BatchServer:
                     cfg, batch=batch_size, seq=max_len, kind=kind,
                     interpret=True,
                 )
-                print(f"[serve] {rep.summary()}")
+                log.info("serve", rep.summary())
                 for spec, dt in rep.unique_specs():
                     points.setdefault(
                         _capture.spec_key(spec, dt),
@@ -102,8 +113,8 @@ class BatchServer:
                 interpret=jax.default_backend() != "tpu",
                 mesh_shape=self.mesh_shape,
             )
-            print(f"[serve] capture swept {n} plan point(s) "
-                  f"({len(points)} unique GEMM spec(s)) -> {db.path}")
+            log.info("serve", f"capture swept {n} plan point(s) "
+                     f"({len(points)} unique GEMM spec(s)) -> {db.path}")
         # Serving replicas reuse the fleet's tuned kernel schedules: warm
         # the persistent codegen cache before the first request arrives.
         if warm_gemms:
@@ -112,9 +123,9 @@ class BatchServer:
 
             cache = default_cache()
             n = warm_dense_cache(warm_gemms)
-            print(f"[serve] warmed {n} GEMM schedule(s) "
-                  f"(cache {cache.path}: {cache.hits} hit, "
-                  f"{cache.misses} miss)")
+            log.info("serve", f"warmed {n} GEMM schedule(s) "
+                     f"(cache {cache.path}: {cache.hits} hit, "
+                     f"{cache.misses} miss)")
         # The stronger warmup: run the full cost-guided search (enumerate
         # -> prune -> measure) and persist the ranked plans; ops.dense
         # prefers these over the analytic tuner from then on.  Hits the
@@ -143,8 +154,15 @@ class BatchServer:
             what = "fwd + derived bwd" if search_grads else "fwd only"
             at = (f" + mesh={'x'.join(map(str, self.mesh_shape))}"
                   if self.mesh_shape else "")
-            print(f"[serve] searched {n} GEMM plan(s) "
-                  f"({what}{at}) -> {db.path}")
+            log.info("serve", f"searched {n} GEMM plan(s) "
+                     f"({what}{at}) -> {db.path}")
+        # pre-register the cache-effectiveness counters so a metrics dump
+        # always carries plan-DB/autotune hit counts, zero included (a
+        # replica whose traffic never consulted the DB should say 0, not
+        # omit the row)
+        for name in ("plandb.hit", "plandb.miss", "autotune.hit",
+                     "autotune.miss"):
+            obs.counter(name).inc(0)
         self.params, _ = self.api.init(cfg, jax.random.key(0))
         decode_fn = lambda p, c, t: self.api.decode_step(  # noqa: E731
             p, self.cfg, c, t
@@ -186,37 +204,50 @@ class BatchServer:
 
     def run(self, requests: List[Request], greedy: bool = True):
         assert len(requests) <= self.batch_size
+        latency = obs.histogram("serve.request_latency_s")
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((self.batch_size, plen), np.int32)
         for i, r in enumerate(requests):
             toks[i, -len(r.prompt):] = r.prompt  # left-pad into the slot
         t0 = time.time()
-        logits, caches = self._prefill(toks)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        with obs.span("serve.prefill", batch=len(requests), prompt_len=plen):
+            logits, caches = self._prefill(toks)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         prefill_s = time.time() - t0
 
         steps = max(r.max_new for r in requests)
         t1 = time.time()
-        for step in range(steps):
-            for i, r in enumerate(requests):
-                if not r.done and len(r.out_tokens) < r.max_new:
-                    r.out_tokens.append(int(next_tok[i]))
-                    if len(r.out_tokens) >= r.max_new:
-                        r.done = True
-            if all(r.done for r in requests):
-                break
-            with self._mesh_ctx():
-                logits, caches = self._decode(
-                    self.params, caches, next_tok[:, None]
-                )
-            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        with obs.span("serve.decode", batch=len(requests), max_steps=steps):
+            for step in range(steps):
+                for i, r in enumerate(requests):
+                    if not r.done and len(r.out_tokens) < r.max_new:
+                        r.out_tokens.append(int(next_tok[i]))
+                        if len(r.out_tokens) >= r.max_new:
+                            r.done = True
+                            # request latency = arrival (run entry) to
+                            # last token emitted
+                            latency.observe(time.time() - t0)
+                            obs.counter("serve.requests").inc()
+                if all(r.done for r in requests):
+                    break
+                with obs.span("serve.decode.step", step=step):
+                    with self._mesh_ctx():
+                        logits, caches = self._decode(
+                            self.params, caches, next_tok[:, None]
+                        )
+                    next_tok = jnp.argmax(
+                        logits[:, -1], axis=-1
+                    ).astype(jnp.int32)
         decode_s = time.time() - t1
         n_tokens = sum(len(r.out_tokens) for r in requests)
+        tok_per_s = n_tokens / max(decode_s, 1e-9)
+        obs.counter("serve.tokens").inc(n_tokens)
+        obs.gauge("serve.tok_per_s").set(tok_per_s)
         return dict(
             prefill_s=prefill_s,
             decode_s=decode_s,
             tokens=n_tokens,
-            tok_per_s=n_tokens / max(decode_s, 1e-9),
+            tok_per_s=tok_per_s,
         )
 
 
@@ -254,6 +285,19 @@ def main():
              "mesh-qualified sharded ladders, and when this process can "
              "host the mesh the serving steps trace under it so eligible "
              "GEMMs dispatch through sharded generated kernels",
+    )
+    ap.add_argument(
+        "--metrics-out", default=None, metavar="FILE",
+        help="write the repro.obs metrics registry (per-request latency "
+             "p50/p99, tokens/sec, plan-DB/autotune hit counts, capture "
+             "dispatch counts) as JSON after the run",
+    )
+    ap.add_argument(
+        "--trace-out", default=None, metavar="FILE",
+        help="write the Chrome-trace/Perfetto span JSON (prefill, decode "
+             "steps, search/codegen phases) after the run; load it at "
+             "chrome://tracing or summarize with scripts/obs_report.py "
+             "--trace",
     )
     ap.add_argument(
         "--capture", action="store_true",
@@ -305,10 +349,15 @@ def main():
         mesh_shape=args.mesh,
     )
     stats = server.run(reqs)
-    print(
-        f"[serve] prefill {stats['prefill_s']*1e3:.1f} ms, "
+    log.info(
+        "serve",
+        f"prefill {stats['prefill_s']*1e3:.1f} ms, "
         f"{stats['tokens']} tokens at {stats['tok_per_s']:.1f} tok/s"
     )
+    if args.metrics_out:
+        log.info("serve", f"metrics -> {obs.metrics_dump(args.metrics_out)}")
+    if args.trace_out:
+        log.info("serve", f"trace -> {obs.trace_dump(args.trace_out)}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ import numpy as np
 
 from .. import checkpoint as ckpt
 from ..configs import SHAPES, get_config
+from ..obs import log
 from ..configs.base import ShapeConfig
 from ..data.pipeline import DataConfig, batch_at
 from ..models.api import get_api
@@ -75,7 +76,7 @@ def train(run: TrainRun, params=None, verbose: bool = True):
         )
         start_step = manifest["step"]
         if verbose:
-            print(f"[restore] resuming from step {start_step}")
+            log.info("restore", f"resuming from step {start_step}")
 
     losses = []
     state = (params, opt_state)
@@ -88,7 +89,8 @@ def train(run: TrainRun, params=None, verbose: bool = True):
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
         if verbose and step % run.log_every == 0:
-            print(
+            log.info(
+                None,
                 f"step {step:5d} loss {float(metrics['loss']):.4f} "
                 f"gnorm {float(metrics['grad_norm']):.3f}",
                 flush=True,
@@ -150,8 +152,9 @@ def main():
     t0 = time.time()
     _, losses, report = train(run)
     dt = time.time() - t0
-    print(
-        f"[train] {args.steps} steps in {dt:.1f}s; "
+    log.info(
+        "train",
+        f"{args.steps} steps in {dt:.1f}s; "
         f"loss {losses[0]:.3f} -> {np.mean(losses[-5:]):.3f}; "
         f"stragglers={len(report.straggler_events)}"
     )

@@ -10,7 +10,10 @@ restore.
   * a straggler watchdog tracks per-step wall time and reports hosts/steps
     exceeding ``straggler_factor`` x the rolling median (on a real cluster
     this feeds the controller that re-schedules the slow host; here it is
-    surfaced in metrics and tested by injection).
+    surfaced through the ``repro.obs`` metrics registry —
+    ``fault.step_wall_s`` histogram, ``fault.last_step_wall_s`` /
+    ``fault.step_median_s`` gauges, ``fault.straggler_events`` counter —
+    and tested by clock injection in tests/test_fault.py).
 
 Elasticity: checkpoints are layout-free (see checkpoint/), so a loop
 restarted with a different mesh simply passes the new shardings to
@@ -64,13 +67,19 @@ class FaultTolerantLoop:
         self.report = LoopReport()
 
     def _watch(self, step: int, dt: float):
+        from ..obs import counter, gauge, histogram
+
         times = self.report.step_times
         times.append(dt)
+        gauge("fault.last_step_wall_s").set(dt)
+        histogram("fault.step_wall_s").observe(dt)
         window = times[-self.cfg.straggler_window:]
         if len(window) >= 5:
             med = statistics.median(window[:-1])
+            gauge("fault.step_median_s").set(med)
             if dt > self.cfg.straggler_factor * med:
                 self.report.straggler_events.append(step)
+                counter("fault.straggler_events").inc()
 
     def run(self, state: Any, start_step: int, num_steps: int) -> Any:
         step = start_step

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.cost import TPU
 from ..core.enumerate import (
     ContractionSpec,
@@ -102,6 +103,10 @@ class RankedPlan:
     max_err: Optional[float] = None
     source: str = "search"  # "default"/"mesh-naive" for baseline entries
     collective: str = ""    # finishing-collective strategy of a mesh plan
+    #: roofline terms the rank was decided from (beam.CostEstimate:
+    #: compute_s/hbm_s/comm_s/penalty/seq_steps/shards) — persisted into
+    #: the plan DB and rendered by ``obs.explain``
+    explain: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def sharded(self) -> bool:
@@ -222,6 +227,7 @@ def search_schedule(
                         measured_s=e.get("measured_s"),
                         source=e.get("source", "search"),
                         collective=e.get("collective", ""),
+                        explain=dict(e.get("explain") or {}),
                     )
                 )
             if ranked:
@@ -235,10 +241,15 @@ def search_schedule(
                     mesh=mesh_desc,
                 )
 
-    survivors, stats = beam_search(
-        spec, beam_width=beam_width, topk=topk,
-        elem_bytes=elem_bytes, hw=hw, mesh_shape=mesh_shape,
-    )
+    with obs.span("search.beam", spec=spec.name, mesh=mesh_desc):
+        survivors, stats = beam_search(
+            spec, beam_width=beam_width, topk=topk,
+            elem_bytes=elem_bytes, hw=hw, mesh_shape=mesh_shape,
+        )
+    obs.counter("search.candidates").inc(stats.considered)
+    obs.counter("search.pruned_bound").inc(stats.pruned_bound)
+    obs.counter("search.pruned_beam").inc(stats.pruned_beam)
+    obs.counter("search.mesh_variants").inc(stats.mesh_variants)
     plans: List[RankedPlan] = [
         RankedPlan(
             schedule=sc.candidate.to_schedule(),
@@ -246,6 +257,7 @@ def search_schedule(
             lower_bound=sc.cost.lower_bound,
             fits_vmem=sc.cost.fits_vmem,
             collective=sc.candidate.collective,
+            explain=_explain_of(sc.cost),
         )
         for sc in survivors
     ]
@@ -267,6 +279,7 @@ def search_schedule(
                     lower_bound=est.lower_bound,
                     fits_vmem=est.fits_vmem,
                     source="default",
+                    explain=_explain_of(est),
                 )
             )
         else:
@@ -315,6 +328,7 @@ def search_schedule(
                         fits_vmem=est.fits_vmem,
                         source="mesh-naive",
                         collective="psum",
+                        explain=_explain_of(est),
                     )
                 )
 
@@ -329,16 +343,20 @@ def search_schedule(
         else:
             measured_plans = list(plans)
         if measured_plans:
-            ms = measure_schedules(
-                spec, [p.schedule for p in measured_plans],
-                arrays=arrays, dtype=dt, interpret=interpret,
-                repeats=repeats, mesh=mesh,
-                collectives=[p.collective for p in measured_plans],
-            )
+            with obs.span(
+                "search.measure", spec=spec.name, n=len(measured_plans)
+            ):
+                ms = measure_schedules(
+                    spec, [p.schedule for p in measured_plans],
+                    arrays=arrays, dtype=dt, interpret=interpret,
+                    repeats=repeats, mesh=mesh,
+                    collectives=[p.collective for p in measured_plans],
+                )
             for p, m in zip(measured_plans, ms):
                 p.measured_s = m.seconds
                 p.max_err = m.max_err
             stats.measured += len(ms)
+            obs.counter("search.measured").inc(len(ms))
         plans.sort(
             key=lambda p: (
                 p.measured_s is None,
@@ -353,25 +371,56 @@ def search_schedule(
         spec=spec, dtype=str(dt), ranked=plans, stats=stats,
         mesh=mesh_desc,
     )
+    if mesh_desc is not None:
+        sharded_best = result.best_sharded()
+        if sharded_best is not None:
+            # which finishing collective won the mesh tier — the
+            # ring-vs-psum pick, surfaced fleet-wide through obs
+            obs.counter(
+                f"search.collective.{sharded_best.collective or 'psum'}"
+            ).inc()
     if plan_db is not None and plans:
-        result.db_key = plan_db.put(
-            spec, dt,
-            [
-                entry_from(
-                    p.schedule,
-                    score=p.score,
-                    lower_bound=p.lower_bound,
-                    fits_vmem=p.fits_vmem,
-                    measured_s=p.measured_s,
-                    source=p.source,
-                    collective=p.collective,
-                )
-                for p in plans
-            ],
-            stats=stats.as_dict(),
-            mesh=mesh_desc,
-        )
+        with obs.span("search.persist", spec=spec.name, mesh=mesh_desc):
+            result.db_key = plan_db.put(
+                spec, dt,
+                [
+                    entry_from(
+                        p.schedule,
+                        score=p.score,
+                        lower_bound=p.lower_bound,
+                        fits_vmem=p.fits_vmem,
+                        measured_s=p.measured_s,
+                        source=p.source,
+                        collective=p.collective,
+                        explain=p.explain,
+                    )
+                    for p in plans
+                ],
+                stats=stats.as_dict(),
+                mesh=mesh_desc,
+                cuts=[
+                    {"key": k, "lower_bound": lb, "best_score": bs}
+                    for k, lb, bs in stats.bound_log[:_MAX_CUTS]
+                ],
+            )
     return result
+
+
+#: bound-cut sample size persisted per entry — enough for the explain
+#: table's why-not side without bloating the fleet DB on big sweeps
+_MAX_CUTS = 12
+
+
+def _explain_of(est: CostEstimate) -> Dict[str, float]:
+    """The CostEstimate terms a plan-DB rung keeps (``explain`` field)."""
+    return {
+        "compute_s": float(est.compute_s),
+        "hbm_s": float(est.hbm_s),
+        "comm_s": float(est.comm_s),
+        "penalty": float(est.penalty),
+        "seq_steps": int(est.seq_steps),
+        "shards": int(est.shards),
+    }
 
 
 def _sched_dict(s: Schedule) -> str:

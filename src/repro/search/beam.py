@@ -26,6 +26,14 @@ Two prune mechanisms, kept separate because they have different guarantees:
 
 States are deduplicated by ``Candidate.canonical_key`` — SJT neighbours that
 the exchange rules map to the same generated kernel collapse to one state.
+
+Observability (``repro.obs``): ``search_schedule`` wraps the phases in
+``search.enumerate``/``search.beam``/``search.measure`` trace spans and
+surfaces ``SearchStats`` through the metrics registry
+(``search.candidates``/``search.pruned_bound``/``search.pruned_beam``...);
+each ``CostEstimate``'s terms are persisted per plan-DB rung and rendered
+by ``scripts/obs_report.py --explain`` — the cost model's working is part
+of the search's output, not a side effect.
 """
 
 from __future__ import annotations
@@ -284,9 +292,11 @@ def beam_search(
     spec = spec.root()
     stats = stats if stats is not None else SearchStats()
     if orders is None:
+        from .. import obs
         from .space import candidate_orders_counted
 
-        orders, visited = candidate_orders_counted(spec, max_orders)
+        with obs.span("search.enumerate", spec=spec.name):
+            orders, visited = candidate_orders_counted(spec, max_orders)
         stats.deduped += max(visited - len(orders), 0)
     orders = [tuple(o) for o in orders]
     if mesh_variants is None:

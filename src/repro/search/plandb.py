@@ -37,9 +37,17 @@ from ..core.schedule import Schedule
 #: lowering.  Every v1 key goes cold on upgrade — deliberate: v1 ladders
 #: carry no mesh provenance, so a sharded fleet could have picked up a
 #: single-device plan for a mesh-qualified lookup (or vice versa).
+#: v3 (observability / plan-explain): entries carry their own identity
+#: (``spec`` = ``spec_signature``, ``dtype``) so ``obs.explain`` can find
+#: them by human selector instead of sha256 key, each rung an ``explain``
+#: dict of the roofline terms the ranking was decided from (compute/HBM/
+#: collective seconds, penalty, shards — ``beam.CostEstimate``), and the
+#: entry a ``cuts`` sample of the sound bound cuts.  v2 keys go cold
+#: (their ladders lack the provenance v3 readers expose); ``PlanDB.get``
+#: counts such upgrades as ``plandb.version_miss`` in ``repro.obs``.
 #: Re-sweeping (``scripts/search_sweep.py``) rebuilds the DB; the golden
 #: fixture ``tests/data/plan_db_golden.json`` was regenerated alongside.
-PLAN_VERSION = 2
+PLAN_VERSION = 3
 
 
 def plan_key(
@@ -47,15 +55,18 @@ def plan_key(
     dtype: Any,
     hardware: Optional[str] = None,
     mesh: Optional[str] = None,
+    version: int = PLAN_VERSION,
 ) -> str:
     """Plan-DB key; ``mesh`` is a ``search.space.mesh_descriptor`` string
     ('2x4') qualifying sharded ladders — conceptually ``matmul@mesh=2x4``
-    — so one fleet DB serves single-device and mesh plans side by side."""
+    — so one fleet DB serves single-device and mesh plans side by side.
+    ``version`` is overridable only so ``PlanDB.get`` can probe whether a
+    miss is really a stale-format entry (a *version* miss)."""
     return cache_key(
         spec,
         dtype=np.dtype(dtype),
         hardware=hardware,
-        extra={"what": "search.plan", "v": PLAN_VERSION, "mesh": mesh},
+        extra={"what": "search.plan", "v": version, "mesh": mesh},
     )
 
 
@@ -85,6 +96,7 @@ class PlanDB:
 
     def __init__(self, path: str):
         self._cache = AutotuneCache(path)
+        self._cache.metrics_prefix = "plandb"  # obs: plandb.hit/.miss
 
     @property
     def path(self) -> str:
@@ -104,20 +116,29 @@ class PlanDB:
         stats: Optional[Dict[str, int]] = None,
         hardware: Optional[str] = None,
         mesh: Optional[str] = None,
+        cuts: Optional[List[Dict[str, Any]]] = None,
     ) -> str:
         """Store ranked entries (best first). Each entry must carry a
         ``schedule`` dict from ``schedule_to_dict``; score/measured_s/
-        lower_bound/collective/source ride along verbatim.  ``mesh`` is
-        the shape descriptor ('2x4') for a mesh-tier sweep, None for
-        single-device ladders."""
+        lower_bound/collective/source/explain ride along verbatim.
+        ``mesh`` is the shape descriptor ('2x4') for a mesh-tier sweep,
+        None for single-device ladders.  ``cuts`` is the bound-cut sample
+        ``obs.explain`` shows as the why-not side of the table.  The
+        entry records its own ``spec`` signature + ``dtype`` (since v3)
+        so explain selectors can find it without recomputing keys."""
+        from ..codegen.cache import spec_signature
+
         key = plan_key(spec, dtype, hardware, mesh=mesh)
         self._cache.put(
             key,
             {
                 "v": PLAN_VERSION,
                 "mesh": mesh,
+                "spec": spec_signature(spec),
+                "dtype": str(np.dtype(dtype)),
                 "ranked": ranked,
                 "stats": stats or {},
+                "cuts": cuts or [],
             },
         )
         return key
@@ -127,7 +148,22 @@ class PlanDB:
         hardware: Optional[str] = None,
         mesh: Optional[str] = None,
     ) -> Optional[Dict[str, Any]]:
-        return self._cache.get(plan_key(spec, dtype, hardware, mesh=mesh))
+        entry = self._cache.get(plan_key(spec, dtype, hardware, mesh=mesh))
+        if entry is None:
+            # classify the miss: an entry under an older PLAN_VERSION key
+            # means the fleet DB predates a format bump (plans went cold
+            # deliberately) rather than never having been swept — an
+            # operator reading the metrics dump re-sweeps instead of
+            # hunting a phantom sweep gap
+            for old_v in range(1, PLAN_VERSION):
+                if self._cache.contains(
+                    plan_key(spec, dtype, hardware, mesh=mesh, version=old_v)
+                ):
+                    from ..obs import counter
+
+                    counter("plandb.version_miss").inc()
+                    break
+        return entry
 
     def best_schedule(
         self, spec: ContractionSpec, dtype: Any,
@@ -219,7 +255,11 @@ def entry_from(
     measured_s: Optional[float] = None,
     source: str = "search",
     collective: str = "",
+    explain: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Any]:
+    """One ranked rung.  ``explain`` carries the roofline terms the rank
+    was decided from (``beam.CostEstimate``: compute_s/hbm_s/comm_s/
+    penalty/seq_steps/shards) — rendered by ``obs.explain``."""
     return {
         "schedule": schedule_to_dict(schedule),
         "score": float(score),
@@ -228,4 +268,5 @@ def entry_from(
         "measured_s": None if measured_s is None else float(measured_s),
         "source": source,
         "collective": collective,
+        "explain": dict(explain or {}),
     }

@@ -1,0 +1,117 @@
+"""Straggler-watchdog metrics: runtime.fault surfaces step walls via obs.
+
+``FaultTolerantLoop._watch`` reports every per-step wall time into the
+``repro.obs`` registry — ``fault.step_wall_s`` (histogram),
+``fault.last_step_wall_s`` / ``fault.step_median_s`` (gauges) and
+``fault.straggler_events`` (counter).  These tests drive the loop with an
+injected clock (same pattern as
+``test_substrate.py::test_straggler_watchdog``) so the expected values
+are exact, and pin the ``REPRO_OBS=0`` contract: the loop runs
+identically but the registry stays empty.
+"""
+
+from __future__ import annotations
+
+import statistics
+
+import pytest
+
+from repro import obs
+from repro.runtime.fault import FaultTolerantLoop, LoopConfig, StepFailure
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs(monkeypatch):
+    monkeypatch.delenv("REPRO_OBS", raising=False)
+    obs.metrics_reset()
+    yield
+    obs.metrics_reset()
+
+
+#: clock readings for 8 steps of 1s each, except step 5 takes 25s
+STRAGGLER_TIMES = [0.0, 1.0,   # step 0
+                   1.0, 2.0,   # step 1
+                   2.0, 3.0, 3.0, 4.0, 4.0, 5.0,
+                   5.0, 30.0,  # step 5: 25s straggler
+                   30.0, 31.0, 31.0, 32.0]
+
+
+def _run_loop():
+    times = iter(STRAGGLER_TIMES)
+    loop = FaultTolerantLoop(
+        step_fn=lambda s, st: st,
+        save_fn=lambda *a: None,
+        restore_fn=lambda: (0, 0.0),
+        config=LoopConfig(checkpoint_every=1000, straggler_factor=3.0),
+        clock=lambda: next(times),
+    )
+    loop.run(0.0, 0, 8)
+    return loop
+
+
+def test_straggler_step_walls_reach_metrics_registry():
+    loop = _run_loop()
+    assert 5 in loop.report.straggler_events  # the pre-obs behaviour holds
+
+    j = obs.metrics_json()
+    walls = [STRAGGLER_TIMES[2 * i + 1] - STRAGGLER_TIMES[2 * i]
+             for i in range(8)]
+    h = j["histograms"]["fault.step_wall_s"]
+    assert h["count"] == 8
+    assert h["sum"] == pytest.approx(sum(walls))
+    assert h["max"] == pytest.approx(25.0)
+
+    assert j["counters"]["fault.straggler_events"] == 1
+    assert j["gauges"]["fault.last_step_wall_s"] == pytest.approx(walls[-1])
+    # the median gauge holds the last window median the watchdog computed
+    # (steps 0..6 at the final step, the 25s outlier included)
+    assert j["gauges"]["fault.step_median_s"] == pytest.approx(
+        statistics.median(walls[:-1])
+    )
+
+
+def test_histogram_percentiles_over_step_walls():
+    import numpy as np
+
+    _run_loop()
+    h = obs.registry().histogram("fault.step_wall_s")
+    walls = [STRAGGLER_TIMES[2 * i + 1] - STRAGGLER_TIMES[2 * i]
+             for i in range(8)]
+    assert h.percentile(50) == pytest.approx(float(np.percentile(walls, 50)))
+    assert h.percentile(99) == pytest.approx(float(np.percentile(walls, 99)))
+
+
+def test_watchdog_is_noop_when_disabled(monkeypatch):
+    monkeypatch.setenv("REPRO_OBS", "0")
+    loop = _run_loop()
+    # loop behaviour identical (report still filled)...
+    assert 5 in loop.report.straggler_events
+    assert loop.report.steps_run == 8
+    # ...but nothing reached the registry
+    assert obs.registry().names() == []
+
+
+def test_failure_replay_does_not_double_count_steps():
+    """A failing step restores + replays; only *completed* steps report
+    wall times, so the histogram count equals steps_run exactly."""
+    calls = {"n": 0}
+
+    def step_fn(step, state):
+        calls["n"] += 1
+        if step == 2 and calls["n"] == 3:  # fail on first visit to step 2
+            raise StepFailure("injected")
+        return state
+
+    t = iter(float(i) for i in range(100))
+    loop = FaultTolerantLoop(
+        step_fn=step_fn,
+        save_fn=lambda *a: None,
+        restore_fn=lambda: (2, 0.0),
+        config=LoopConfig(checkpoint_every=1000),
+        clock=lambda: next(t),
+    )
+    loop.run(0.0, 0, 4)
+    assert loop.report.failures == 1
+    j = obs.metrics_json()
+    assert (j["histograms"]["fault.step_wall_s"]["count"]
+            == loop.report.steps_run)

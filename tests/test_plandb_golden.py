@@ -1,7 +1,7 @@
 """Golden regression: plan-DB on-disk format — grad and mesh keys included.
 
 ``tests/data/plan_db_golden.json`` is a committed snapshot of the ranked
-plan database ``search_schedule`` writes (PLAN_VERSION 2, hardware
+plan database ``search_schedule`` writes (PLAN_VERSION 3, hardware
 fingerprint pinned to ``golden/fixture-hw``), mirroring
 ``tests/test_cache_golden.py`` for the PR-2/PR-3 formats.  It covers the
 forward ``matmul`` key (f32 + bf16), the derived backward keys
@@ -21,9 +21,12 @@ sharded plans side by side:
     ``ops._tuned_kernel`` performs) must return the stored winners.
 
 PLAN_VERSION history: v1 = PR-2/PR-3 single-device format; v2 = the mesh
-tier (this file's pin) — keys gained the ``mesh`` qualifier and rungs the
-``collective`` field; every v1 key went cold deliberately (see the
-migration note in ``search/plandb.py``).
+tier — keys gained the ``mesh`` qualifier and rungs the ``collective``
+field; v3 = observability (this file's pin) — entries self-describe with
+``spec``/``dtype`` and carry a ``cuts`` bound-cut sample, rungs carry the
+``explain`` roofline terms (what ``scripts/obs_report.py --explain``
+renders); every v1/v2 key went cold deliberately (see the migration note
+in ``search/plandb.py``).
 
 Regenerate only after a deliberate format bump (``PLAN_VERSION``):
 
@@ -93,25 +96,33 @@ def fixture_data():
 def test_plan_version_is_pinned():
     """Bumping PLAN_VERSION invalidates every key below — this test makes
     sure the bump happens deliberately, fixture regenerated alongside.
-    v2 = the mesh tier (mesh-qualified keys + collective field)."""
-    assert PLAN_VERSION == 2
+    v3 = observability (self-describing spec/dtype, explain terms,
+    bound-cut sample)."""
+    assert PLAN_VERSION == 3
 
 
 def test_fixture_is_wellformed(fixture_data):
     assert len(fixture_data) == len(FIXTURE_POINTS)
     mesh_entries = 0
     for entry in fixture_data.values():
-        assert set(entry) >= {"v", "ranked", "stats"}
+        assert set(entry) >= {"v", "ranked", "stats", "spec", "dtype", "cuts"}
         assert entry["v"] == PLAN_VERSION
         assert entry["ranked"], "empty ranked ladder in fixture"
+        # v3: entries self-describe so obs_report --explain can find them
+        assert entry["spec"].get("name"), "entry spec lacks a name"
+        assert "extents" in entry["spec"]
         if entry.get("mesh"):
             mesh_entries += 1
         for rung in entry["ranked"]:
             assert set(rung) >= {
                 "schedule", "score", "lower_bound", "fits_vmem",
-                "measured_s", "source", "collective",
+                "measured_s", "source", "collective", "explain",
             }
             assert set(rung["schedule"]) == {"splits", "levels"}
+            if rung["source"] == "search":
+                assert {"compute_s", "hbm_s", "comm_s", "penalty"} <= set(
+                    rung["explain"]
+                ), "search rung missing roofline explain terms"
     assert mesh_entries == 2, "mesh-qualified entries missing from fixture"
 
 

@@ -54,6 +54,7 @@ OBS_OVERHEAD_MAX = 1.02
 BENCH_JSON = "BENCH_pr3.json"
 BENCH_MESH_JSON = "BENCH_mesh.json"
 BENCH_OBS_JSON = "BENCH_obs.json"
+BENCH_SERVE_JSON = "BENCH_serve.json"
 REQUIRED = [
     "kernel.gen.matmul",
     "kernel.gen.vs_handwritten",
@@ -77,6 +78,17 @@ REQUIRED_MESH = [
     "mesh.search",
     "mesh.vs_psum",
     "mesh.ring",
+]
+#: the --serve run replaces kernel_bench with serve_bench entirely: the
+#: continuous-batching engine must not be slower than the fixed-slot
+#: baseline AND must produce byte-identical per-request greedy outputs
+REQUIRED_SERVE = [
+    "serve.continuous.tok_per_s",
+    "serve.fixed.tok_per_s",
+    "serve.p50",
+    "serve.p99",
+    "serve.vs_fixed",
+    "serve.differential",
 ]
 
 
@@ -102,6 +114,10 @@ def check_row(name: str, derived: str) -> str:
         return "mesh row unhealthy (ok=True missing)"
     if name == "mesh.vs_psum" and "not_slower=True" not in derived:
         return "searched sharded schedule slower than naive psum lowering"
+    if name == "serve.vs_fixed" and "not_slower=True" not in derived:
+        return "continuous batching slower than the fixed-slot baseline"
+    if name == "serve.differential" and "ok=True" not in derived:
+        return "continuous/fixed per-request outputs diverged"
     if name.startswith("capture.sites."):
         m = re.search(r"dispatched=(\d+)", derived)
         if not m:
@@ -135,7 +151,10 @@ def _field(derived: str, key: str):
     return val if math.isfinite(val) else None
 
 
-def write_bench_json(repo: str, rows: dict, out_name: str = BENCH_JSON) -> str:
+def write_bench_json(
+    repo: str, rows: dict, out_name: str = BENCH_JSON,
+    source: str = "kernel_bench --smoke",
+) -> str:
     """Persist the parsed rows as the PR's perf baseline.
 
     ``rows`` maps name -> (seconds, derived).  GFLOP/s comes from the
@@ -163,7 +182,7 @@ def write_bench_json(repo: str, rows: dict, out_name: str = BENCH_JSON) -> str:
         json.dump(
             {
                 "schema": 1,
-                "source": "scripts/bench_smoke.py (kernel_bench --smoke)",
+                "source": f"scripts/bench_smoke.py ({source})",
                 "rows": out,
             },
             f, indent=1, sort_keys=True, allow_nan=False,
@@ -211,7 +230,14 @@ def main() -> int:
         help="force an 8-device CPU mesh for the bench subprocess and "
              "gate on the mesh.* rows (sharded search + ring collective)",
     )
+    ap.add_argument(
+        "--serve", action="store_true",
+        help="run benchmarks.serve_bench instead of kernel_bench and "
+             "gate on the serve.* rows (continuous vs fixed-slot)",
+    )
     args = ap.parse_args()
+    if args.mesh and args.serve:
+        ap.error("--mesh and --serve are separate CI jobs; pick one")
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -220,6 +246,7 @@ def main() -> int:
     )
     required = list(REQUIRED)
     bench_json = BENCH_JSON
+    bench_module = "benchmarks.kernel_bench"
     if args.mesh:
         flags = env.get("XLA_FLAGS", "")
         env["XLA_FLAGS"] = (
@@ -227,8 +254,12 @@ def main() -> int:
         ).strip()
         required += REQUIRED_MESH
         bench_json = BENCH_MESH_JSON
+    if args.serve:
+        required = list(REQUIRED_SERVE)
+        bench_json = BENCH_SERVE_JSON
+        bench_module = "benchmarks.serve_bench"
     proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.kernel_bench", "--smoke"],
+        [sys.executable, "-m", bench_module, "--smoke"],
         cwd=repo, env=env, capture_output=True, text=True, timeout=1800,
     )
     sys.stdout.write(proc.stdout)
@@ -261,11 +292,13 @@ def main() -> int:
         print(f"{name:32s} {status:6s} {detail}")
 
     if proc.returncode != 0:
-        failures.append(f"kernel_bench exited {proc.returncode}")
+        failures.append(f"{bench_module} exited {proc.returncode}")
     if failures:
         print(f"\nFAIL ({len(failures)}):\n  " + "\n  ".join(failures))
         return 1
-    path = write_bench_json(repo, rows, bench_json)
+    path = write_bench_json(
+        repo, rows, bench_json, source=f"{bench_module} --smoke"
+    )
     print(f"\nOK: {len(rows)} rows, {len(required)} required, all healthy")
     print(f"baseline written to {path}")
     obs_rows = {n: rows[n] for n in rows if n.startswith("obs.")}

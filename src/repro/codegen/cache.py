@@ -138,10 +138,14 @@ class AutotuneCache:
         self.path = path
         self._lock = threading.Lock()
         self._data: Optional[Dict[str, Any]] = None
+        # -- stats, for tests and ops dashboards ----------------------------
+        # instance state, updated under self._lock: concurrent readers
+        # previously raced the unsynchronized ``self.hits += 1`` (a
+        # read-modify-write) and lost counts, so the attributes could
+        # disagree with the obs counters
+        self.hits: int = 0
+        self.misses: int = 0
 
-    # -- stats, for tests and ops dashboards --------------------------------
-    hits: int = 0
-    misses: int = 0
     #: when set ("autotune"/"plandb"), lookups also feed the repro.obs
     #: counters ``<prefix>.hit`` / ``<prefix>.miss`` — bare instances used
     #: as scratch storage in tests stay silent
@@ -160,16 +164,20 @@ class AutotuneCache:
     def get(self, key: str) -> Optional[Any]:
         with self._lock:
             val = self._load().get(key)
-        if val is None:
-            self.misses += 1
-        else:
-            self.hits += 1
-        if self.metrics_prefix:
-            from ..obs import counter
+            # accounting stays under the lock: the attribute bump and the
+            # obs counter must move together or a concurrent reader can
+            # observe them disagreeing (and lose attribute increments)
+            if val is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            if self.metrics_prefix:
+                from ..obs import counter
 
-            counter(
-                f"{self.metrics_prefix}.{'miss' if val is None else 'hit'}"
-            ).inc()
+                counter(
+                    f"{self.metrics_prefix}."
+                    f"{'miss' if val is None else 'hit'}"
+                ).inc()
         return val
 
     def contains(self, key: str) -> bool:
@@ -206,10 +214,11 @@ class AutotuneCache:
     def clear(self) -> None:
         with self._lock:
             self._data = {}
-            try:
-                os.unlink(self.path)
-            except OSError:
-                pass
+            for p in (self.path, self.path + ".lock"):
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
 
 
 _default: Optional[AutotuneCache] = None

@@ -1,12 +1,19 @@
-"""Serving driver: batched prefill + decode with KV caches.
+"""Serving CLI: continuous-batching paged-KV engine, fixed-slot baseline.
 
-A minimal continuous-batching server: requests queue up, get packed into a
-fixed decode batch, prefill fills each slot's cache, and the decode loop
-emits one token per step per live slot until max_new or EOS.  On the
-production mesh the cache shardings come from launch.steps.serve_bundle.
+``--engine continuous`` (default) drives the ``launch.serving`` tier: a
+block-table paged KV cache, FCFS continuous batching (requests join the
+decode batch the step after prefill, free their pages the step they
+finish, preempt-newest recompute when the pool runs dry) and separate
+phase-tagged prefill/decode plan ladders.  ``--engine fixed`` keeps this
+module's original :class:`BatchServer` — requests packed into a fixed
+decode batch that rounds every group up to its longest member — as the
+differential and throughput baseline.  Both engines emit one token per
+step per live request until max_new or ``--eos-id``, and under greedy
+decoding produce identical per-request outputs.  On the production mesh
+the cache shardings come from launch.steps.serve_bundle.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
-      --requests 8 --prompt-len 32 --max-new 16
+      --requests 8 --prompt-len 32 --max-new 16 --engine continuous
 
 Observability (``repro.obs``): prefill and every decode step run inside
 trace spans, each finished request records into the
@@ -197,40 +204,88 @@ class BatchServer:
 
         return set_mesh(self.mesh)
 
-    def _prefill(self, tokens: np.ndarray):
+    def _prefill(self, tokens: np.ndarray, lengths=None):
         batch = {"tokens": jnp.asarray(tokens), **self.extra_batch}
+        if lengths is not None:
+            batch["lengths"] = jnp.asarray(lengths, jnp.int32)
         with self._mesh_ctx():
             return self._prefill_fn(self.params, batch)
 
-    def run(self, requests: List[Request], greedy: bool = True):
-        assert len(requests) <= self.batch_size
-        latency = obs.histogram("serve.request_latency_s")
+    def _pack(self, requests: List[Request]):
+        """Pack prompts into the slot matrix; returns (tokens, lengths).
+
+        Attention families right-pad and carry per-row true lengths, so
+        prefill masks the pads out and a short prompt decodes identically
+        batched or solo.  SSM/hybrid recurrences fold every input token
+        into their state — no attention mask can unpollute it — so those
+        keep the legacy left-pad (lengths=None) and equal-length prompts.
+        """
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((self.batch_size, plen), np.int32)
+        if self.cfg.family in ("ssm", "hybrid"):
+            for i, r in enumerate(requests):
+                toks[i, plen - len(r.prompt):] = r.prompt
+            return toks, None
+        lengths = np.ones((self.batch_size,), np.int32)
         for i, r in enumerate(requests):
-            toks[i, -len(r.prompt):] = r.prompt  # left-pad into the slot
+            toks[i, :len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+        return toks, lengths
+
+    def run(self, requests: List[Request], greedy: bool = True,
+            eos_id: Optional[int] = None):
+        assert len(requests) <= self.batch_size
+        latency = obs.histogram("serve.request_latency_s")
         t0 = time.time()
-        with obs.span("serve.prefill", batch=len(requests), prompt_len=plen):
-            logits, caches = self._prefill(toks)
+
+        def finish(r: Request):
+            r.done = True
+            # request latency = arrival (run entry) to last token — or to
+            # prefill completion for max_new=0, which still counts as a
+            # served request
+            latency.observe(time.time() - t0)
+            obs.counter("serve.requests").inc()
+
+        def emit(next_host: np.ndarray):
+            """Append one token per live request; finish on max_new/EOS."""
+            for i, r in enumerate(requests):
+                if r.done:
+                    continue
+                tok = int(next_host[i])
+                r.out_tokens.append(tok)
+                if (len(r.out_tokens) >= r.max_new
+                        or (eos_id is not None and tok == eos_id)):
+                    finish(r)
+
+        toks, lengths = self._pack(requests)
+        with obs.span("serve.prefill", batch=len(requests),
+                      prompt_len=toks.shape[1]):
+            logits, caches = self._prefill(toks, lengths)
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         prefill_s = time.time() - t0
 
-        steps = max(r.max_new for r in requests)
+        # max_new=0 requests are complete the moment prefill returns:
+        # nothing to emit, but the latency/served-request accounting must
+        # still see them (they used to spin the full decode loop and never
+        # record).
+        for r in requests:
+            if not r.done and r.max_new <= 0:
+                finish(r)
+        # Each request's first token comes from the *prefill* logits —
+        # emit it before the decode clock starts so tok/s measures pure
+        # decode throughput.
+        if not all(r.done for r in requests):
+            emit(np.asarray(next_tok))
+        n_prefill_tokens = sum(len(r.out_tokens) for r in requests)
+
         t1 = time.time()
-        with obs.span("serve.decode", batch=len(requests), max_steps=steps):
-            for step in range(steps):
-                for i, r in enumerate(requests):
-                    if not r.done and len(r.out_tokens) < r.max_new:
-                        r.out_tokens.append(int(next_tok[i]))
-                        if len(r.out_tokens) >= r.max_new:
-                            r.done = True
-                            # request latency = arrival (run entry) to
-                            # last token emitted
-                            latency.observe(time.time() - t0)
-                            obs.counter("serve.requests").inc()
-                if all(r.done for r in requests):
-                    break
-                with obs.span("serve.decode.step", step=step):
+        steps = 0
+        with obs.span("serve.decode", batch=len(requests)):
+            # while-before-dispatch: when emit() finishes the last
+            # request, the loop exits without a wasted trailing decode
+            # dispatch
+            while not all(r.done for r in requests):
+                with obs.span("serve.decode.step", step=steps):
                     with self._mesh_ctx():
                         logits, caches = self._decode(
                             self.params, caches, next_tok[:, None]
@@ -238,15 +293,20 @@ class BatchServer:
                     next_tok = jnp.argmax(
                         logits[:, -1], axis=-1
                     ).astype(jnp.int32)
+                steps += 1
+                emit(np.asarray(next_tok))
         decode_s = time.time() - t1
         n_tokens = sum(len(r.out_tokens) for r in requests)
-        tok_per_s = n_tokens / max(decode_s, 1e-9)
+        n_decode_tokens = n_tokens - n_prefill_tokens
+        tok_per_s = n_decode_tokens / max(decode_s, 1e-9)
         obs.counter("serve.tokens").inc(n_tokens)
         obs.gauge("serve.tok_per_s").set(tok_per_s)
         return dict(
             prefill_s=prefill_s,
             decode_s=decode_s,
+            decode_steps=steps,
             tokens=n_tokens,
+            decode_tokens=n_decode_tokens,
             tok_per_s=tok_per_s,
         )
 
@@ -258,6 +318,41 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument(
+        "--engine", choices=("continuous", "fixed"), default="continuous",
+        help="'continuous': slot-free continuous batching over the paged "
+             "KV pool (launch.serving) — requests join decode the step "
+             "after their prefill and free pages the step they finish.  "
+             "'fixed': the legacy fixed-slot BatchServer, kept as the "
+             "differential baseline.  Non-attention families (ssm/hybrid) "
+             "always serve fixed",
+    )
+    ap.add_argument(
+        "--lanes", type=int, default=4,
+        help="decode batch width: concurrent requests per decode step "
+             "(continuous) / slots per group (fixed)",
+    )
+    ap.add_argument(
+        "--page-size", type=int, default=16,
+        help="KV page size in tokens (continuous engine)",
+    )
+    ap.add_argument(
+        "--pages", type=int, default=0,
+        help="physical KV pages in the pool; 0 sizes it so every lane "
+             "can reach max context without preemption",
+    )
+    ap.add_argument(
+        "--eos-id", type=int, default=None,
+        help="token id that finishes a request early (default: none — "
+             "requests run to max_new)",
+    )
+    ap.add_argument(
+        "--rate-hz", type=float, default=200.0,
+        help="Poisson arrival rate of the synthetic trace; 0 = all "
+             "requests arrive at t=0 (saturated queue)",
+    )
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (prompts, lengths, arrivals)")
     ap.add_argument(
         "--warm-gemms", default="",
         help="semicolon-separated M,K,N GEMM shapes to pre-tune "
@@ -312,17 +407,7 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    rng = np.random.default_rng(0)
-    reqs = [
-        Request(
-            rid=i,
-            prompt=rng.integers(
-                0, cfg.vocab, size=args.prompt_len
-            ).astype(np.int32),
-            max_new=args.max_new,
-        )
-        for i in range(args.requests)
-    ]
+
     def _parse_shapes(flag: str, raw: str):
         try:
             shapes = tuple(
@@ -338,21 +423,59 @@ def main():
 
     warm = _parse_shapes("--warm-gemms", args.warm_gemms)
     search = _parse_shapes("--search-gemms", args.search_gemms)
-    server = BatchServer(
-        cfg,
-        batch_size=args.requests,
-        max_len=args.prompt_len + args.max_new + 1,
-        warm_gemms=warm,
-        search_gemms=search,
-        search_grads=not args.no_search_grads,
-        capture=args.capture,
-        mesh_shape=args.mesh,
+
+    from .serving import (ContinuousEngine, FixedEngine, Gateway,
+                          synthetic_trace)
+
+    trace = synthetic_trace(
+        args.requests,
+        vocab=cfg.vocab,
+        seed=args.seed,
+        rate_hz=args.rate_hz,
+        prompt_lens=tuple(sorted({
+            max(1, args.prompt_len // 4),
+            max(1, args.prompt_len // 2),
+            args.prompt_len,
+        })),
+        max_news=tuple(sorted({max(1, args.max_new // 4), args.max_new})),
     )
-    stats = server.run(reqs)
+    max_ctx = args.prompt_len + args.max_new + 1
+    engine_kind = args.engine
+    if engine_kind == "continuous" and cfg.family not in ("dense", "moe"):
+        log.info("serve", f"family {cfg.family!r} has unpageable state — "
+                 "serving fixed-slot")
+        engine_kind = "fixed"
+    if engine_kind == "continuous":
+        pages_per_req = -(-max_ctx // args.page_size)
+        n_pages = args.pages or (1 + args.lanes * pages_per_req)
+        engine = ContinuousEngine(
+            cfg,
+            lanes=args.lanes,
+            page_size=args.page_size,
+            n_pages=n_pages,
+            max_ctx=max_ctx,
+            search_gemms=search,
+            search_grads=not args.no_search_grads,
+            mesh_shape=args.mesh,
+        )
+    else:
+        engine = FixedEngine(
+            cfg,
+            lanes=args.lanes,
+            max_ctx=max_ctx,
+            warm_gemms=warm,
+            search_gemms=search,
+            search_grads=not args.no_search_grads,
+            capture=args.capture,
+            mesh_shape=args.mesh,
+        )
+    stats = Gateway(engine).run(trace, eos_id=args.eos_id)
     log.info(
         "serve",
-        f"prefill {stats['prefill_s']*1e3:.1f} ms, "
-        f"{stats['tokens']} tokens at {stats['tok_per_s']:.1f} tok/s"
+        f"[{engine_kind}] prefill {stats['prefill_s']*1e3:.1f} ms, "
+        f"decode {stats['decode_s']*1e3:.1f} ms over "
+        f"{stats['decode_steps']} step(s), {stats['tokens']} tokens at "
+        f"{stats['tok_per_s']:.1f} decode tok/s"
     )
     if args.metrics_out:
         log.info("serve", f"metrics -> {obs.metrics_dump(args.metrics_out)}")

@@ -1,0 +1,201 @@
+"""Block-table paged KV cache — the storage layer of the serving tier.
+
+KV memory is one physical pool per attention-cache leaf, carved into
+fixed-size pages:
+
+    pool["segN"][kind]["k"] : (layers, n_pages, page_size, kv_heads, hd)
+
+A request owns an ordered list of page ids (its *block table*); logical
+cache position ``p`` lives at page ``pages[p // page_size]``, offset
+``p % page_size``.  Allocation and release are O(pages) free-list moves
+on the host (:class:`PagePool`), so requests of wildly different lengths
+share the pool without fragmentation — the whole point of paging.
+
+The model itself is unchanged: before each decode step the lanes' pages
+are gathered into the dense stacked-cache pytree ``models.api`` already
+consumes (:func:`paged_view`), and the single KV row the step appends is
+scattered back to its physical page (:func:`scatter_token`).  Both are
+pure jax functions traced once per (lanes, max_pages) shape — the block
+table and lengths are runtime data, so page churn never recompiles.
+
+Physical page 0 is reserved as the *sink*: idle decode lanes point their
+block tables at it, and the garbage KV their dispatches produce lands
+there instead of in live pages.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from ...configs.base import ModelConfig
+from ...models import transformer
+
+#: block-table entry for slots past a request's last page (and for every
+#: slot of an idle lane) — all of them alias the sink page
+SINK_PAGE = 0
+
+
+class PagePool:
+    """Host-side free-list over physical page ids (page 0 = sink)."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the sink)")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO so recently-freed (cache-warm) pages are reused first
+        self._free = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Usable pages (the sink is never allocatable)."""
+        return self.n_pages - 1
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache positions (>= 1)."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or None (and no change) if the pool is short."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"bad page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+def pool_init(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict:
+    """Physical KV pools mirroring ``transformer.cache_init``'s structure
+    (one {"k", "v"} leaf pair per segment x layer-kind, layers stacked)."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV serves attention families only, not {cfg.family!r} "
+            "(SSM state is not paged)"
+        )
+    kv, hd, dt = cfg.n_kv_heads, cfg.hd, cfg.param_dtype
+    pools: Dict = {}
+    for si, (pattern, count) in enumerate(transformer.segment_plan(cfg)):
+        pools[f"seg{si}"] = {
+            kind: {
+                "k": jnp.zeros((count, n_pages, page_size, kv, hd), dt),
+                "v": jnp.zeros((count, n_pages, page_size, kv, hd), dt),
+            }
+            for kind in pattern
+        }
+    return pools
+
+
+def paged_view(pools: Dict, block_table, lens, page_size: int) -> Dict:
+    """Gather each lane's pages into the dense stacked-cache pytree.
+
+    block_table (lanes, max_pages) int32, lens (lanes,) int32 = number of
+    KV rows present per lane.  The view's tail positions (>= lens) hold
+    whatever the sink/unwritten pages contain; ``decode_attention`` masks
+    ``t >= cache_len`` to exactly zero weight, so they are never read.
+    """
+    lanes, max_pages = block_table.shape
+
+    def view(p):
+        g = p[:, block_table]  # (L, lanes, max_pages, page, kv, hd)
+        return g.reshape(
+            p.shape[0], lanes, max_pages * page_size, p.shape[3], p.shape[4]
+        )
+
+    caches: Dict = {}
+    for seg, kinds in pools.items():
+        caches[seg] = {}
+        for kind, pv in kinds.items():
+            n_layers = pv["k"].shape[0]
+            caches[seg][kind] = {
+                "k": view(pv["k"]),
+                "v": view(pv["v"]),
+                "len": jnp.broadcast_to(
+                    lens[None, :].astype(jnp.int32), (n_layers, lanes)
+                ),
+            }
+    return caches
+
+
+def scatter_token(
+    pools: Dict, new_caches: Dict, block_table, lens, page_size: int
+) -> Dict:
+    """Write the KV row each lane's decode step appended back to its page.
+
+    The step wrote at view position ``lens`` (the pre-step cache length),
+    which physically lives at page ``block_table[lane, lens // page_size]``
+    offset ``lens % page_size``.  Idle lanes (lens=0, all-sink tables)
+    scatter their garbage onto the sink page; duplicate sink indices are
+    resolved arbitrarily, which is fine — nothing reads the sink.
+    """
+    lanes = block_table.shape[0]
+    lane = jnp.arange(lanes)
+    page_of = block_table[lane, lens // page_size]  # (lanes,)
+    off = lens % page_size
+
+    def pick(arr):  # (L, lanes, ctx, kv, hd) -> row at lens: (L, lanes, kv, hd)
+        idx = jnp.broadcast_to(
+            lens[None, :, None, None, None].astype(jnp.int32),
+            (arr.shape[0], lanes, 1, arr.shape[3], arr.shape[4]),
+        )
+        return jnp.take_along_axis(arr, idx, axis=2)[:, :, 0]
+
+    out: Dict = {}
+    for seg, kinds in pools.items():
+        out[seg] = {}
+        for kind, pv in kinds.items():
+            nc = new_caches[seg][kind]
+            out[seg][kind] = {
+                "k": pv["k"].at[:, page_of, off].set(pick(nc["k"])),
+                "v": pv["v"].at[:, page_of, off].set(pick(nc["v"])),
+            }
+    return out
+
+
+def store_prefill(pools: Dict, caches: Dict, page_ids, page_size: int) -> Dict:
+    """Copy a batch-1 prefill cache into physical pages.
+
+    ``caches`` is the dense cache a ``max_len = len(page_ids) * page_size``
+    prefill produced; page ``j`` of it (positions ``[j*ps, (j+1)*ps)``)
+    lands on physical page ``page_ids[j]``.  Positions past the prompt's
+    true length hold pad KV — harmless, because a position is only ever
+    attended once ``cache_len`` exceeds it, and decode overwrites it with
+    the real token's KV before that happens.
+    """
+
+    def body(pl, xs):
+        j, pid = xs
+        new: Dict = {}
+        for seg, kinds in pl.items():
+            new[seg] = {}
+            for kind, pv in kinds.items():
+                c = caches[seg][kind]
+
+                def src(arr):  # (L, 1, max_len, kv, hd) -> (L, page, kv, hd)
+                    return lax.dynamic_slice_in_dim(
+                        arr[:, 0], j * page_size, page_size, axis=1
+                    )
+
+                new[seg][kind] = {
+                    "k": pv["k"].at[:, pid].set(src(c["k"])),
+                    "v": pv["v"].at[:, pid].set(src(c["v"])),
+                }
+        return new, None
+
+    n = page_ids.shape[0]
+    pools, _ = lax.scan(body, pools, (jnp.arange(n), page_ids))
+    return pools

@@ -48,12 +48,24 @@ def _lm_api() -> ModelAPI:
             p, c, b["tokens"], b["labels"], **kw
         ),
         prefill=lambda p, c, b, max_len, **kw: transformer.prefill(
-            p, c, b["tokens"], max_len
+            p, c, b["tokens"], max_len, lengths=b.get("lengths")
         ),
         decode_step=transformer.decode_step,
         cache_init=transformer.cache_init,
         cache_axes=transformer.cache_axes,
     )
+
+
+def _hybrid_prefill(p, c, b, max_len):
+    if b.get("lengths") is not None:
+        # SSM recurrences fold every input token into the state — a pad
+        # token pollutes it no matter what the attention layers mask, so
+        # right-padded batching is attention-family only.
+        raise NotImplementedError(
+            "lengths-masked prefill is not supported for ssm/hybrid "
+            "families; serve them with per-request (batch-1) prefill"
+        )
+    return hybrid.prefill(p, c, b["tokens"], max_len)
 
 
 def _hybrid_api() -> ModelAPI:
@@ -63,8 +75,8 @@ def _hybrid_api() -> ModelAPI:
         loss=lambda p, c, b, **kw: hybrid.loss_fn(
             p, c, b["tokens"], b["labels"], **kw
         ),
-        prefill=lambda p, c, b, max_len, **kw: hybrid.prefill(
-            p, c, b["tokens"], max_len
+        prefill=lambda p, c, b, max_len, **kw: _hybrid_prefill(
+            p, c, b, max_len
         ),
         decode_step=hybrid.decode_step,
         cache_init=hybrid.cache_init,

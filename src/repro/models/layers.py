@@ -212,12 +212,20 @@ def blockwise_attention(
     causal: bool = True,
     q_block: int = 512,
     k_block: int = 512,
+    kv_lengths: Optional[jax.Array] = None,  # (B,) valid key counts
 ) -> jax.Array:
     """Flash-style online-softmax attention: O(S*block) memory, pure JAX.
 
     This is the rnz-subdivision of the softmax reduction: the key/value
     sequence is ``subdiv``-ed into blocks and the reduction regrouped over
     them (the paper's eq 44' with an online-rescaled monoid).
+
+    ``kv_lengths`` masks out keys at positions >= the per-sequence length
+    — the attention half of variable-length (right-padded) prefill.  With
+    causal masking and right padding no *real* query row can reach a pad
+    key anyway (pads sit after every real position), so real rows are
+    bitwise identical with or without it; the mask guarantees pad rows
+    cannot leak even on non-causal uses.
     """
     B, S, H, hd = q.shape
     T, KV = k.shape[1], k.shape[2]
@@ -244,10 +252,13 @@ def blockwise_attention(
             s = jnp.einsum(
                 "bqkgh,bpkh->bkgqp", qc.astype(F32), kc.astype(F32)
             ) * scale
+            k_pos = ki * k_block + jnp.arange(k_block)
             if causal:
-                k_pos = ki * k_block + jnp.arange(k_block)
                 mask = q_pos[:, None] >= k_pos[None, :]
                 s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if kv_lengths is not None:
+                valid = k_pos[None, :] < kv_lengths[:, None]  # (B, kb)
+                s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -323,13 +334,22 @@ def attention_apply(
     cache: Optional[Dict] = None,
     q_block: int = 512,
     k_block: int = 512,
+    lengths: Optional[jax.Array] = None,
 ):
-    """Returns (y, new_cache).  cache = {k, v, len} for decode."""
+    """Returns (y, new_cache).  cache = {k, v, len} for decode.
+
+    ``lengths`` (B,) marks right-padded prefill: keys past each
+    sequence's true length are masked out of the attention and the cache
+    ``len`` starts at the true length (not the padded S), so decode
+    writes its first token over the first pad slot and never attends pad
+    KV — the fix for the mixed-length batching leak.
+    """
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, cfg, x, positions)
     if cache is None:
         y = blockwise_attention(
-            q, k, v, causal=causal, q_block=q_block, k_block=k_block
+            q, k, v, causal=causal, q_block=q_block, k_block=k_block,
+            kv_lengths=lengths,
         )
         new_cache = None
     elif S == 1:
@@ -349,11 +369,13 @@ def attention_apply(
             cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
         )
         y = blockwise_attention(
-            q, k, v, causal=causal, q_block=q_block, k_block=k_block
+            q, k, v, causal=causal, q_block=q_block, k_block=k_block,
+            kv_lengths=lengths,
         )
         new_cache = {
             "k": k_cache, "v": v_cache,
-            "len": jnp.full((B,), S, jnp.int32),
+            "len": (jnp.full((B,), S, jnp.int32) if lengths is None
+                    else lengths.astype(jnp.int32)),
         }
     y = ops.dense(y.reshape(B * S, -1), params["wo"]).reshape(B, S, -1)
     return y, new_cache

@@ -103,13 +103,13 @@ def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
 
 def _block(
     lp, cfg: ModelConfig, kind: str, x, *, positions, cache=None,
-    q_block=512, k_block=512,
+    q_block=512, k_block=512, lengths=None,
 ):
     h = L.rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
     y, new_cache = L.attention_apply(
         lp["attn"], cfg, h,
         positions=positions, cache=cache,
-        q_block=q_block, k_block=k_block,
+        q_block=q_block, k_block=k_block, lengths=lengths,
     )
     x = x + y
     h = L.rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
@@ -122,7 +122,7 @@ def _block(
 
 def _run_segments(
     params, cfg: ModelConfig, x, *, positions, caches=None,
-    q_block=512, k_block=512,
+    q_block=512, k_block=512, lengths=None,
 ):
     """caches: same segment structure, stacked; returns (x, new_caches)."""
     new_caches: Dict = {}
@@ -139,7 +139,7 @@ def _run_segments(
                 h, nc = _block(
                     lp[kind], cfg, kind, h,
                     positions=positions, cache=c,
-                    q_block=q_block, k_block=k_block,
+                    q_block=q_block, k_block=k_block, lengths=lengths,
                 )
                 if nc is not None:
                     ncs[kind] = nc
@@ -232,17 +232,29 @@ def _first_cache_len(caches) -> jax.Array:
     raise ValueError("no attention cache found")
 
 
-def prefill(params, cfg: ModelConfig, tokens, max_len: int):
-    """Prefill: forward over the prompt, building the KV caches."""
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, lengths=None):
+    """Prefill: forward over the prompt, building the KV caches.
+
+    ``lengths`` (B,) declares right-padded prompts: positions past each
+    row's true length are excluded from attention, the caches start at
+    the true lengths, and the returned logits come from each row's last
+    *real* position — so a short prompt batched with longer ones decodes
+    identically to running it solo.
+    """
     B, S = tokens.shape
     caches = cache_init(cfg, B, max_len)
     x = L.embed(params["embedding"], tokens).astype(cfg.param_dtype)
     positions = jnp.arange(S)[None, :].astype(jnp.int32)
     x, new_caches = _run_segments(
-        params, cfg, x, positions=positions, caches=caches
+        params, cfg, x, positions=positions, caches=caches, lengths=lengths
     )
     # serving needs only the next-token distribution: unembed the last
     # position (a full 32k x 152k-vocab prefill logit tensor would dwarf
     # the KV cache itself)
-    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x = L.rmsnorm(params["final_norm"], x_last, cfg.norm_eps)
     return L.logits(params["embedding"], cfg, x), new_caches

@@ -39,6 +39,7 @@ import os
 __all__ = [
     "enabled",
     "span",
+    "complete_event",
     "trace_events",
     "trace_json",
     "trace_dump",
@@ -72,6 +73,7 @@ from .metrics import (  # noqa: E402
     registry,
 )
 from .trace import (  # noqa: E402
+    complete_event,
     span,
     trace_dump,
     trace_events,

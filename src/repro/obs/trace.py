@@ -115,6 +115,40 @@ def span(name: str, cat: str = "repro", **args: Any):
     return _Span(name, cat, args)
 
 
+def complete_event(
+    name: str,
+    start_s: float,
+    dur_s: float,
+    cat: str = "repro",
+    **args: Any,
+) -> None:
+    """Record a Chrome-trace complete event retroactively.
+
+    For region timings that cannot be a ``with span(...)`` because their
+    lifetimes overlap in one thread — e.g. a serving gateway's
+    per-request spans, where dozens of requests are in flight at once and
+    each spans arrival→finish.  ``start_s`` is a ``time.perf_counter()``
+    reading; the event lands on the same process epoch as ``span``.
+    Free when ``REPRO_OBS=0``.
+    """
+    from . import enabled
+
+    if not enabled():
+        return
+    ev = {
+        "name": name,
+        "cat": cat,
+        "ph": "X",
+        "ts": (start_s - _EPOCH) * 1e6,
+        "dur": dur_s * 1e6,
+        "pid": os.getpid(),
+        "tid": threading.get_ident(),
+        "args": dict(args),
+    }
+    with _lock:
+        _events.append(ev)
+
+
 def trace_events() -> List[Dict[str, Any]]:
     """Snapshot of the completed-span events recorded so far."""
     with _lock:

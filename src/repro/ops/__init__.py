@@ -104,9 +104,14 @@ def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
     and every later call for the same spec/shape/dtype picks it up.  When
     a device mesh is active the mesh-shape-qualified key is consulted
     first (``_mesh_plan_kernel``), so a ``--mesh`` sweep upgrades every
-    op under that mesh to sharded generated kernels.  With no plan on
-    record this degrades to PR-1 behaviour (``codegen.tune_schedule`` +
-    persistent autotune cache).
+    op under that mesh to sharded generated kernels.  When a serving
+    phase is active (``search.serving_phase`` — entered by the
+    prefill/decode runners around their jitted steps) the
+    phase-qualified ladder is consulted before the unphased one, so the
+    decode runner's bandwidth-bound skinny GEMMs serve their own searched
+    winner rather than the prefill ladder's.  With no plan on record this
+    degrades to PR-1 behaviour (``codegen.tune_schedule`` + persistent
+    autotune cache).
     """
     from .. import codegen
 
@@ -115,14 +120,20 @@ def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
     # which must not take down serving — but must not be silent either.
     schedule = None
     try:
-        from ..search import default_plan_db
+        from ..search import active_phase, default_plan_db
 
         kern = _mesh_plan_kernel(
             spec, dtype, epilogue=epilogue, interpret=interpret
         )
         if kern is not None:
             return kern
-        schedule = default_plan_db().best_schedule(spec, np.dtype(dtype))
+        phase = active_phase()
+        if phase is not None:
+            schedule = default_plan_db().best_schedule(
+                spec, np.dtype(dtype), phase=phase
+            )
+        if schedule is None:
+            schedule = default_plan_db().best_schedule(spec, np.dtype(dtype))
     except Exception as e:
         global _plan_db_warned
         if not _plan_db_warned:

@@ -56,13 +56,16 @@ class FaultTolerantLoop:
         step_fn: Callable[[int, Any], Any],       # (step, state) -> state
         save_fn: Callable[[int, Any], None],      # checkpoint writer
         restore_fn: Callable[[], tuple],          # () -> (step, state)
-        config: LoopConfig = LoopConfig(),
+        config: Optional[LoopConfig] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.step_fn = step_fn
         self.save_fn = save_fn
         self.restore_fn = restore_fn
-        self.cfg = config
+        # None sentinel: a dataclass default instance here would be shared
+        # by every loop ever constructed, so mutating one loop's config
+        # (e.g. a test tightening straggler_factor) leaks into all others
+        self.cfg = config if config is not None else LoopConfig()
         self.clock = clock
         self.report = LoopReport()
 

@@ -55,7 +55,15 @@ from .measure import (
     reference_arrays,
     schedule_mesh_axes,
 )
-from .plandb import PlanDB, default_plan_db, entry_from, grad_plan_keys, plan_key
+from .plandb import (
+    PlanDB,
+    active_phase,
+    default_plan_db,
+    entry_from,
+    grad_plan_keys,
+    plan_key,
+    serving_phase,
+)
 from .space import (
     Candidate,
     MeshVariant,
@@ -164,6 +172,7 @@ def search_schedule(
     plan_db: Optional[PlanDB] = None,
     use_cached_plan: bool = True,
     mesh_shape=None,
+    phase: Optional[str] = None,
 ) -> SearchResult:
     """The end-to-end pipeline: enumerate -> prune -> measure -> persist.
 
@@ -189,6 +198,11 @@ def search_schedule(
     ``plan_db`` (or pass ``default_plan_db()``) persists the ladder;
     ``use_cached_plan`` short-circuits a repeated search of the same
     spec/dtype/hardware/mesh from the DB.
+
+    ``phase`` ('prefill'/'decode') persists the ladder under the
+    serving-phase-qualified key (``plandb.plan_key(phase=...)``) — the
+    ladder the serving runners consult via ``plandb.serving_phase`` while
+    an unphased sweep of the same shape stays untouched.
     """
     spec = spec.root()
     dt = np.dtype(dtype)
@@ -201,7 +215,7 @@ def search_schedule(
         mesh_shape = None
 
     if plan_db is not None and use_cached_plan:
-        cached = plan_db.get(spec, dt, mesh=mesh_desc)
+        cached = plan_db.get(spec, dt, mesh=mesh_desc, phase=phase)
         if (
             cached
             and cached.get("ranked")
@@ -237,7 +251,7 @@ def search_schedule(
                         setattr(stats, k, v)
                 return SearchResult(
                     spec=spec, dtype=str(dt), ranked=ranked, stats=stats,
-                    db_key=plan_key(spec, dt, mesh=mesh_desc),
+                    db_key=plan_key(spec, dt, mesh=mesh_desc, phase=phase),
                     mesh=mesh_desc,
                 )
 
@@ -402,6 +416,7 @@ def search_schedule(
                     {"key": k, "lower_bound": lb, "best_score": bs}
                     for k, lb, bs in stats.bound_log[:_MAX_CUTS]
                 ],
+                phase=phase,
             )
     return result
 
@@ -468,6 +483,7 @@ def search_gemm_plans(
     plan_db: Optional[PlanDB] = None,
     with_grads: bool = False,
     mesh_shape=None,
+    phase: Optional[str] = None,
 ) -> int:
     """Search + persist plans for (m, k, n) GEMMs; returns #plans readied.
 
@@ -481,6 +497,9 @@ def search_gemm_plans(
     is additionally swept at the mesh tier, persisting sharded ladders
     under the mesh-qualified keys that ``ops._tuned_kernel`` consults
     when a matching mesh is active (the count includes those sweeps).
+    With ``phase`` the ladders persist under the serving-phase-qualified
+    keys — how the prefill/decode runners each sweep their own ladder for
+    the same shape family.
     """
     db = plan_db if plan_db is not None else default_plan_db()
     n = 0
@@ -489,6 +508,7 @@ def search_gemm_plans(
         kw = dict(
             dtype=dtype, beam_width=beam_width, topk=topk,
             interpret=interpret, measure=measure, plan_db=db,
+            phase=phase,
         )
         meshes = [None] + ([mesh_shape] if mesh_shape is not None else [])
         for ms in meshes:
@@ -513,6 +533,7 @@ __all__ = [
     "SearchResult",
     "SearchStats",
     "SPEC_FAMILIES",
+    "active_phase",
     "beam_search",
     "block_choices",
     "candidate_orders",
@@ -534,6 +555,7 @@ __all__ = [
     "search_gemm_plans",
     "search_schedule",
     "search_schedule_with_grads",
+    "serving_phase",
     "spec_from_name",
     "sweep_specs",
 ]

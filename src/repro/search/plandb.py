@@ -16,8 +16,10 @@ they are disjoint from autotune keys even if the files are merged by hand.
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import os
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -56,18 +58,58 @@ def plan_key(
     hardware: Optional[str] = None,
     mesh: Optional[str] = None,
     version: int = PLAN_VERSION,
+    phase: Optional[str] = None,
 ) -> str:
     """Plan-DB key; ``mesh`` is a ``search.space.mesh_descriptor`` string
     ('2x4') qualifying sharded ladders — conceptually ``matmul@mesh=2x4``
     — so one fleet DB serves single-device and mesh plans side by side.
+    ``phase`` ('prefill'/'decode') qualifies serving-phase ladders the
+    same way — conceptually ``matmul@phase=decode`` — so the decode
+    runner's skinny ``M=batch`` GEMMs rank their own ladder instead of
+    inheriting the compute-bound prefill winner for the same shape.  A
+    ``None`` phase is omitted from the hashed payload entirely, keeping
+    every pre-phase key byte-identical (the golden fixtures pin this).
     ``version`` is overridable only so ``PlanDB.get`` can probe whether a
     miss is really a stale-format entry (a *version* miss)."""
+    extra: Dict[str, Any] = {"what": "search.plan", "v": version, "mesh": mesh}
+    if phase is not None:
+        extra["phase"] = phase
     return cache_key(
         spec,
         dtype=np.dtype(dtype),
         hardware=hardware,
-        extra={"what": "search.plan", "v": version, "mesh": mesh},
+        extra=extra,
     )
+
+
+#: the serving phase the *calling context* is executing under — consulted
+#: by ``ops._tuned_kernel`` at trace time so the same GEMM shape resolves
+#: to its phase-qualified ladder inside a prefill vs a decode runner.
+#: contextvars (not a bare global) so threaded gateways and nested jit
+#: traces each see their own phase.
+_ACTIVE_PHASE: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "repro_serving_phase", default=None
+)
+
+
+def active_phase() -> Optional[str]:
+    """The serving phase tag of the current context, or None."""
+    return _ACTIVE_PHASE.get()
+
+
+@contextlib.contextmanager
+def serving_phase(phase: Optional[str]) -> Iterator[None]:
+    """Scope a serving phase ('prefill'/'decode') over kernel dispatch.
+
+    Entered by the serving runners around their jitted steps; while
+    active, ``ops._tuned_kernel`` consults the phase-qualified plan key
+    first and falls back to the unphased ladder on a miss.
+    """
+    tok = _ACTIVE_PHASE.set(phase)
+    try:
+        yield
+    finally:
+        _ACTIVE_PHASE.reset(tok)
 
 
 def grad_plan_keys(
@@ -117,39 +159,44 @@ class PlanDB:
         hardware: Optional[str] = None,
         mesh: Optional[str] = None,
         cuts: Optional[List[Dict[str, Any]]] = None,
+        phase: Optional[str] = None,
     ) -> str:
         """Store ranked entries (best first). Each entry must carry a
         ``schedule`` dict from ``schedule_to_dict``; score/measured_s/
         lower_bound/collective/source/explain ride along verbatim.
         ``mesh`` is the shape descriptor ('2x4') for a mesh-tier sweep,
-        None for single-device ladders.  ``cuts`` is the bound-cut sample
+        None for single-device ladders; ``phase`` tags a serving-phase
+        ladder ('prefill'/'decode').  ``cuts`` is the bound-cut sample
         ``obs.explain`` shows as the why-not side of the table.  The
         entry records its own ``spec`` signature + ``dtype`` (since v3)
         so explain selectors can find it without recomputing keys."""
         from ..codegen.cache import spec_signature
 
-        key = plan_key(spec, dtype, hardware, mesh=mesh)
-        self._cache.put(
-            key,
-            {
-                "v": PLAN_VERSION,
-                "mesh": mesh,
-                "spec": spec_signature(spec),
-                "dtype": str(np.dtype(dtype)),
-                "ranked": ranked,
-                "stats": stats or {},
-                "cuts": cuts or [],
-            },
-        )
+        key = plan_key(spec, dtype, hardware, mesh=mesh, phase=phase)
+        payload = {
+            "v": PLAN_VERSION,
+            "mesh": mesh,
+            "spec": spec_signature(spec),
+            "dtype": str(np.dtype(dtype)),
+            "ranked": ranked,
+            "stats": stats or {},
+            "cuts": cuts or [],
+        }
+        if phase is not None:
+            payload["phase"] = phase
+        self._cache.put(key, payload)
         return key
 
     def get(
         self, spec: ContractionSpec, dtype: Any,
         hardware: Optional[str] = None,
         mesh: Optional[str] = None,
+        phase: Optional[str] = None,
     ) -> Optional[Dict[str, Any]]:
-        entry = self._cache.get(plan_key(spec, dtype, hardware, mesh=mesh))
-        if entry is None:
+        entry = self._cache.get(
+            plan_key(spec, dtype, hardware, mesh=mesh, phase=phase)
+        )
+        if entry is None and phase is None:
             # classify the miss: an entry under an older PLAN_VERSION key
             # means the fleet DB predates a format bump (plans went cold
             # deliberately) rather than never having been swept — an
@@ -169,6 +216,7 @@ class PlanDB:
         self, spec: ContractionSpec, dtype: Any,
         hardware: Optional[str] = None,
         mesh: Optional[str] = None,
+        phase: Optional[str] = None,
     ) -> Optional[Schedule]:
         """The stored winner, deserialized and validated — or None.
 
@@ -176,13 +224,15 @@ class PlanDB:
         change) degrades to a miss, never an error: callers fall back to
         ``codegen.tune_schedule``.
         """
-        sched, _ = self.best_entry(spec, dtype, hardware, mesh=mesh)
+        sched, _ = self.best_entry(spec, dtype, hardware, mesh=mesh,
+                                   phase=phase)
         return sched
 
     def best_entry(
         self, spec: ContractionSpec, dtype: Any,
         hardware: Optional[str] = None,
         mesh: Optional[str] = None,
+        phase: Optional[str] = None,
     ) -> Tuple[Optional[Schedule], Dict[str, Any]]:
         """(winner schedule, its raw entry dict) — or (None, {}).
 
@@ -191,7 +241,7 @@ class PlanDB:
         mesh-sharded plan was measured with, which ``ops._tuned_kernel``
         forwards to ``bind_mesh``).
         """
-        entry = self.get(spec, dtype, hardware, mesh=mesh)
+        entry = self.get(spec, dtype, hardware, mesh=mesh, phase=phase)
         if not entry or not entry.get("ranked"):
             return None, {}
         try:

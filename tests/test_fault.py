@@ -91,6 +91,30 @@ def test_watchdog_is_noop_when_disabled(monkeypatch):
     assert obs.registry().names() == []
 
 
+def test_default_configs_are_per_loop_not_shared():
+    """Regression: ``config: LoopConfig = LoopConfig()`` as the dataclass
+    default evaluated ONCE at import, so every loop built without an
+    explicit config shared one mutable LoopConfig — tuning one loop's
+    thresholds silently retuned every other loop in the process."""
+    def mk(**kw):
+        return FaultTolerantLoop(
+            step_fn=lambda s, st: st,
+            save_fn=lambda *a: None,
+            restore_fn=lambda: (0, 0.0),
+            **kw,
+        )
+
+    a, b = mk(), mk()
+    assert a.cfg is not b.cfg
+    a.cfg.straggler_factor = 99.0
+    a.cfg.checkpoint_every = 7
+    assert b.cfg.straggler_factor == LoopConfig().straggler_factor
+    assert b.cfg.checkpoint_every == LoopConfig().checkpoint_every
+    # an explicit config is adopted as-is, not copied
+    mine = LoopConfig(max_retries=9)
+    assert mk(config=mine).cfg is mine
+
+
 def test_failure_replay_does_not_double_count_steps():
     """A failing step restores + replays; only *completed* steps report
     wall times, so the histogram count equals steps_run exactly."""

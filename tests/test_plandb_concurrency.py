@@ -130,3 +130,66 @@ def test_lock_file_is_reused_not_leaked(tmp_path):
         )
     siblings = sorted(os.listdir(tmp_path))
     assert siblings == ["plans.json", "plans.json.lock"]
+
+
+def test_clear_removes_stale_lock_sibling(tmp_path):
+    """clear() must also remove ``<path>.lock`` — a cleared cache that
+    leaves the lock file behind looks half-deleted and re-creating the
+    cache at the same path inherits a stale sibling."""
+    from repro.codegen.cache import AutotuneCache
+
+    path = str(tmp_path / "cache.json")
+    c = AutotuneCache(path)
+    c.put("k", {"v": 1})
+    assert os.path.exists(path) and os.path.exists(path + ".lock")
+    c.clear()
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".lock")
+    # still usable afterwards
+    c.put("k2", 2)
+    assert c.get("k2") == 2
+
+
+def test_threaded_readers_count_hits_and_misses_exactly(tmp_path):
+    """Regression: ``get()`` bumped hits/misses OUTSIDE the cache lock, so
+    concurrent readers raced the read-modify-write and lost counts — the
+    attributes could disagree with the obs counters and with reality.
+    Both accountings must now be exact under contention."""
+    import threading
+
+    from repro import obs
+    from repro.codegen.cache import AutotuneCache
+
+    obs.metrics_reset()
+    try:
+        c = AutotuneCache(str(tmp_path / "cache.json"))
+        c.metrics_prefix = "cachetest"
+        c.put("present", 1)
+        c.hits = c.misses = 0          # discount put-time bookkeeping
+        obs.metrics_reset()
+
+        n_threads, n_iter = 8, 300
+        barrier = threading.Barrier(n_threads)
+
+        def reader():
+            barrier.wait()
+            for _ in range(n_iter):
+                c.get("present")
+                c.get("absent")
+
+        threads = [threading.Thread(target=reader) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        expected = n_threads * n_iter
+        assert c.hits == expected, f"lost {expected - c.hits} hit counts"
+        assert c.misses == expected, (
+            f"lost {expected - c.misses} miss counts"
+        )
+        j = obs.metrics_json()
+        assert j["counters"]["cachetest.hit"] == expected
+        assert j["counters"]["cachetest.miss"] == expected
+    finally:
+        obs.metrics_reset()

@@ -25,6 +25,14 @@ On success (and only then) the parsed rows are written to
 ``flops=`` fields kernel_bench emits) and max_err — the machine-readable
 perf trajectory later PRs diff against.
 
+With ``--attn`` the bench subprocess runs only the fused-family sections
+(``kernel_bench --smoke --attn``) and the ``attn.fused`` /
+``moe.grouped`` rows become required: ``attn.fused`` must report
+``not_slower=True`` (the analytic HBM claim — the fused kernel never
+round-trips the score tensor) and ``moe.grouped`` must report
+``ok=True`` (the ragged kernel matches the per-group dot loop).  Rows
+land in ``BENCH_attn.json`` — the attn-smoke CI job's artifact.
+
 With ``--mesh`` the bench subprocess runs under a forced 8-device CPU mesh
 (``--xla_force_host_platform_device_count=8``) and the ``mesh.*`` rows
 become required: ``mesh.search`` and ``mesh.ring`` must report ``ok=True``
@@ -35,7 +43,7 @@ measured set).  This is the mesh-smoke CI job's entry point; the parsed
 rows then land in ``BENCH_mesh.json`` instead of the single-device
 baseline file.
 
-Usage: python scripts/bench_smoke.py [--mesh]
+Usage: python scripts/bench_smoke.py [--mesh | --serve | --attn]
 """
 
 from __future__ import annotations
@@ -55,6 +63,7 @@ BENCH_JSON = "BENCH_pr3.json"
 BENCH_MESH_JSON = "BENCH_mesh.json"
 BENCH_OBS_JSON = "BENCH_obs.json"
 BENCH_SERVE_JSON = "BENCH_serve.json"
+BENCH_ATTN_JSON = "BENCH_attn.json"
 REQUIRED = [
     "kernel.gen.matmul",
     "kernel.gen.vs_handwritten",
@@ -90,6 +99,13 @@ REQUIRED_SERVE = [
     "serve.vs_fixed",
     "serve.differential",
 ]
+#: the --attn run gates the fused families (ISSUE 8): the fused attention
+#: kernel's analytic HBM claim vs the unfused two-GEMM+softmax program,
+#: and the ragged grouped kernel's correctness vs the per-group dot loop
+REQUIRED_ATTN = [
+    "attn.fused",
+    "moe.grouped",
+]
 
 
 def check_row(name: str, derived: str) -> str:
@@ -118,6 +134,11 @@ def check_row(name: str, derived: str) -> str:
         return "continuous batching slower than the fixed-slot baseline"
     if name == "serve.differential" and "ok=True" not in derived:
         return "continuous/fixed per-request outputs diverged"
+    if name == "attn.fused" and "not_slower=True" not in derived:
+        return ("fused attention claims more HBM traffic than the "
+                "unfused two-GEMM+softmax program")
+    if name == "moe.grouped" and "ok=True" not in derived:
+        return "grouped kernel diverged from the per-group dot loop"
     if name.startswith("capture.sites."):
         m = re.search(r"dispatched=(\d+)", derived)
         if not m:
@@ -235,9 +256,14 @@ def main() -> int:
         help="run benchmarks.serve_bench instead of kernel_bench and "
              "gate on the serve.* rows (continuous vs fixed-slot)",
     )
+    ap.add_argument(
+        "--attn", action="store_true",
+        help="run only kernel_bench's fused attention + grouped-GEMM "
+             "sections and gate on the attn.fused / moe.grouped rows",
+    )
     args = ap.parse_args()
-    if args.mesh and args.serve:
-        ap.error("--mesh and --serve are separate CI jobs; pick one")
+    if sum((args.mesh, args.serve, args.attn)) > 1:
+        ap.error("--mesh/--serve/--attn are separate CI jobs; pick one")
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -247,6 +273,11 @@ def main() -> int:
     required = list(REQUIRED)
     bench_json = BENCH_JSON
     bench_module = "benchmarks.kernel_bench"
+    bench_flags = ["--smoke"]
+    if args.attn:
+        required = list(REQUIRED_ATTN)
+        bench_json = BENCH_ATTN_JSON
+        bench_flags.append("--attn")
     if args.mesh:
         flags = env.get("XLA_FLAGS", "")
         env["XLA_FLAGS"] = (
@@ -259,7 +290,7 @@ def main() -> int:
         bench_json = BENCH_SERVE_JSON
         bench_module = "benchmarks.serve_bench"
     proc = subprocess.run(
-        [sys.executable, "-m", bench_module, "--smoke"],
+        [sys.executable, "-m", bench_module, *bench_flags],
         cwd=repo, env=env, capture_output=True, text=True, timeout=1800,
     )
     sys.stdout.write(proc.stdout)
@@ -297,7 +328,8 @@ def main() -> int:
         print(f"\nFAIL ({len(failures)}):\n  " + "\n  ".join(failures))
         return 1
     path = write_bench_json(
-        repo, rows, bench_json, source=f"{bench_module} --smoke"
+        repo, rows, bench_json,
+        source=f"{bench_module} {' '.join(bench_flags)}",
     )
     print(f"\nOK: {len(rows)} rows, {len(required)} required, all healthy")
     print(f"baseline written to {path}")

@@ -24,6 +24,15 @@ Examples:
       # whole-model sweep: harvest the config's full GEMM set via
       # repro.capture (train+prefill+decode, abstract trace — no
       # allocation) and sweep every harvested spec, fwd+bwd, in one pass
+  python scripts/search_sweep.py --spec attention --shapes 4,64,64,8 \
+      --interpret --with-grads
+      # fused flash-attention family: shapes = heads,q_seq,kv_seq,head_dim;
+      # the KV axis is searched as an in-schedule reduction tier (online
+      # softmax) and --with-grads sweeps attention.dQ/.dK/.dV too
+  python scripts/search_sweep.py --spec grouped_matmul \
+      --shapes 4,16,32,32 --interpret --with-grads
+      # ragged grouped GEMM (MoE expert FFNs): shapes =
+      # groups,rows_per_group,k,f — one group-offset Pallas grid
 
 Exit code is non-zero if any sweep point fails to produce a plan or the
 persisted winner does not round-trip.
@@ -53,9 +62,9 @@ def main() -> int:
     ap.add_argument(
         "--spec", default=None,
         help="spec family (matmul, matvec, weighted_matmul, "
-             "batched_matmul, chain_matmul, transposed_matmul); "
-             "default matmul.  Incompatible with --from-model, which "
-             "harvests its own specs",
+             "batched_matmul, chain_matmul, transposed_matmul, "
+             "attention, grouped_matmul); default matmul.  Incompatible "
+             "with --from-model, which harvests its own specs",
     )
     ap.add_argument(
         "--shapes", default=None,

@@ -30,7 +30,9 @@ from jax import core as jcore
 
 from ..core.enumerate import (
     ContractionSpec,
+    attention_spec,
     batched_matmul_spec,
+    grouped_matmul_spec,
     matmul_spec,
     transposed_matmul_spec,
 )
@@ -165,6 +167,7 @@ class _Shaped:
 def classify_dot_general(
     lhs_aval, rhs_aval, out_aval, params: Dict[str, Any], *,
     interpret: bool, site_id: int = 0, path: str = "",
+    grouped_lhs: bool = False,
 ) -> CaptureSite:
     """Map one ``dot_general`` equation to a ContractionSpec + dispatch verdict.
 
@@ -247,6 +250,18 @@ def classify_dot_general(
     ):
         b, m, d = site.lhs_shape
         f = site.rhs_shape[2]
+        if grouped_lhs:
+            # the lhs rows were routed here by a scatter (MoE dispatch):
+            # expert slab b of the rhs multiplies only *its* row block, so
+            # this is the uniform-group case of the ragged grouped GEMM —
+            # one searched group-offset kernel instead of a batched one
+            site.op = "grouped_dense"
+            site.spec = grouped_matmul_spec((m,) * b, d, f)
+            if ops._grouped_kernel_ok(_Shaped((b * m, d)), interpret):
+                site.status = "dispatched"
+            else:
+                site.reason = "cpu backend without interpret mode"
+            return site
         site.op = "batched_dense"
         site.spec = batched_matmul_spec(b, m, d, f)
         if ops._batched_kernel_ok(
@@ -262,6 +277,289 @@ def classify_dot_general(
         f"contract=({lc},{rc}) batch=({lb},{rb})"
     )
     return site
+
+
+# ---------------------------------------------------------------------------
+# fused-pattern analysis: attention motif + scatter-tainted grouped GEMMs
+# ---------------------------------------------------------------------------
+
+#: mask fills below this count as "minus infinity" for motif purposes
+_MASK_FLOOR = -1e20
+
+#: producers the motif matcher looks through (layout/dtype plumbing)
+_TRANSPARENT = frozenset({
+    "reshape", "broadcast_in_dim", "convert_element_type",
+    "squeeze", "expand_dims",
+})
+
+
+@dataclasses.dataclass
+class AttentionMotif:
+    """One matched einsum-softmax-einsum chain, rewritable as one fused op.
+
+    ``terminal`` is the closing ``div`` equation (its outvar carries the
+    attention output); ``interior`` holds ids of every equation whose
+    value exists only to feed the terminal — the rewriter skips them and
+    evaluates ``ops.attention(q, k, v)`` at the terminal instead.
+    """
+
+    terminal_id: int
+    interior: frozenset
+    q: Any
+    k: Any
+    v: Any
+    causal: bool
+    site: CaptureSite
+
+
+@dataclasses.dataclass
+class JaxprAnalysis:
+    """Fused-pattern facts of ONE jaxpr level (sub-jaxprs analyzed apart).
+
+    ``interior`` maps interior-equation id -> owning terminal id, so the
+    rewriter can skip an equation only when its motif actually dispatches.
+    """
+
+    motifs: Dict[int, AttentionMotif] = dataclasses.field(
+        default_factory=dict
+    )
+    interior: Dict[int, int] = dataclasses.field(default_factory=dict)
+    grouped: frozenset = frozenset()
+
+
+def _peel(atom, producers, visited):
+    """Follow layout-only producers back; returns (atom, defining eqn)."""
+    while isinstance(atom, jcore.Var) and atom in producers:
+        eqn = producers[atom]
+        if eqn.primitive.name in _TRANSPARENT:
+            visited.append(eqn)
+            atom = eqn.invars[0]
+        else:
+            return atom, eqn
+    return atom, None
+
+
+def _is_causal_pred(pred, producers) -> bool:
+    """pred == (col_iota <= row_iota), structurally — no constant masks."""
+    if not isinstance(pred, jcore.Var) or pred not in producers:
+        return False
+    cmp = producers[pred]
+    if cmp.primitive.name not in ("le", "ge") or len(cmp.invars) != 2:
+        return False
+    dims = []
+    for v in cmp.invars:
+        if not isinstance(v, jcore.Var) or v not in producers:
+            return False
+        src = producers[v]
+        if src.primitive.name != "iota":
+            return False
+        dims.append(src.params["dimension"])
+    want = (2, 1) if cmp.primitive.name == "le" else (1, 2)
+    return tuple(dims) == want
+
+
+def _match_attention(div_eqn, producers, consumers, live_out, *, interpret):
+    """Match the plain-path attention chain ending at ``div_eqn``.
+
+    Expected (walking backwards, through layout-only ops):
+
+        div(num, rowsum)  <- num = dot_general(exp_p, V)  b(0,0) c(2,1)
+                             rowsum = reduce_sum(exp_p, axes=(2,))
+        exp_p = exp(scores_masked - reduce_max(scores_masked, axes=(2,)))
+        scores_masked = [where(col<=row, ., -big)] (mul(dot1, d**-0.5))
+        dot1 = dot_general(Q, K)  b(0,0) c(2,2)
+
+    Every interior value must be consumed only inside the chain — the
+    rewrite replaces the whole region with one ``ops.attention`` call.
+    """
+    from .. import ops
+
+    chain: List[Any] = []
+    _, dot2 = _peel(div_eqn.invars[0], producers, chain)
+    if dot2 is None or dot2.primitive.name != "dot_general":
+        return None
+    (lc, rc), (lb, rb) = dot2.params["dimension_numbers"]
+    if (tuple(lb), tuple(rb), tuple(lc), tuple(rc)) != \
+            ((0,), (0,), (2,), (1,)):
+        return None
+    chain.append(dot2)
+
+    _, rsum = _peel(div_eqn.invars[1], producers, chain)
+    if (
+        rsum is None or rsum.primitive.name != "reduce_sum"
+        or tuple(rsum.params["axes"]) != (2,)
+    ):
+        return None
+    chain.append(rsum)
+
+    _, exp_a = _peel(rsum.invars[0], producers, chain)
+    _, exp_b = _peel(dot2.invars[0], producers, chain)
+    if exp_a is None or exp_a is not exp_b or exp_a.primitive.name != "exp":
+        return None
+    chain.append(exp_a)
+
+    _, sub = _peel(exp_a.invars[0], producers, chain)
+    if sub is None or sub.primitive.name != "sub":
+        return None
+    chain.append(sub)
+    _, rmax = _peel(sub.invars[1], producers, chain)
+    if (
+        rmax is None or rmax.primitive.name != "reduce_max"
+        or tuple(rmax.params["axes"]) != (2,)
+    ):
+        return None
+    chain.append(rmax)
+    _, masked = _peel(sub.invars[0], producers, chain)
+    _, masked2 = _peel(rmax.invars[0], producers, chain)
+    if masked is None or masked is not masked2:
+        return None
+
+    causal = False
+    if (
+        masked.primitive.name == "pjit"
+        and str(masked.params.get("name")) in ("_where", "where")
+        and len(masked.invars) == 3
+    ):
+        pred, scores_in, fill = masked.invars
+        if not (
+            isinstance(fill, jcore.Literal)
+            and float(fill.val) <= _MASK_FLOOR
+        ):
+            return None
+        if not _is_causal_pred(pred, producers):
+            return None
+        causal = True
+        chain.append(masked)
+        _, mul = _peel(scores_in, producers, chain)
+    else:
+        mul = masked
+    if mul is None or mul.primitive.name != "mul":
+        return None
+    chain.append(mul)
+
+    scale_lit = dot1 = None
+    for a, b in (mul.invars, reversed(mul.invars)):
+        if isinstance(b, jcore.Literal) and np.ndim(b.val) == 0:
+            _, cand = _peel(a, producers, chain)
+            if cand is not None and cand.primitive.name == "dot_general":
+                scale_lit, dot1 = float(b.val), cand
+            break
+    if dot1 is None:
+        return None
+    (lc, rc), (lb, rb) = dot1.params["dimension_numbers"]
+    if (tuple(lb), tuple(rb), tuple(lc), tuple(rc)) != \
+            ((0,), (0,), (2,), (2,)):
+        return None
+    chain.append(dot1)
+
+    q_atom, k_atom = dot1.invars
+    v_atom = dot2.invars[1]
+    qa, ka, va = (x.aval for x in (q_atom, k_atom, v_atom))
+    if qa.ndim != 3 or ka.ndim != 3 or va.ndim != 3:
+        return None
+    h, s, d = qa.shape
+    t = ka.shape[1]
+    e = va.shape[2]
+    if ka.shape != (h, t, d) or va.shape[:2] != (h, t):
+        return None
+    if abs(scale_lit - d ** -0.5) > 1e-6 * d ** -0.5:
+        return None  # non-standard scaling: not the op we generate
+
+    # the fused call replaces the whole region — nothing outside it may
+    # observe an interior value
+    interior_ids = {id(c) for c in chain}
+    for c in chain:
+        for ov in c.outvars:
+            if ov in live_out:
+                return None
+            for user in consumers.get(ov, ()):
+                if id(user) not in interior_ids and user is not div_eqn:
+                    return None
+
+    site = CaptureSite(
+        site_id=0,
+        path="",
+        lhs_shape=tuple(qa.shape),
+        rhs_shape=tuple(ka.shape),
+        out_shape=tuple(div_eqn.outvars[0].aval.shape),
+        dtype=np.dtype(qa.dtype).name,
+        out_dtype=np.dtype(div_eqn.outvars[0].aval.dtype).name,
+        dimension_numbers=dot1.params["dimension_numbers"],
+        op="attention",
+        spec=attention_spec(h, s, t, d, e=e, causal=causal),
+    )
+    if np.dtype(qa.dtype) != np.dtype(ka.dtype) or \
+            np.dtype(qa.dtype) != np.dtype(va.dtype):
+        site.reason = "mixed attention operand dtypes"
+    elif site.dtype not in SUPPORTED_DTYPES:
+        site.reason = f"unsupported dtype {site.dtype}"
+    elif ops._attention_kernel_ok(_Shaped((h, s, d)), interpret):
+        site.status = "dispatched"
+    else:
+        site.reason = "cpu backend without interpret mode"
+    return AttentionMotif(
+        terminal_id=id(div_eqn),
+        interior=frozenset(interior_ids),
+        q=q_atom, k=k_atom, v=v_atom,
+        causal=causal,
+        site=site,
+    )
+
+
+def analyze_jaxpr(jaxpr: jcore.Jaxpr, *, interpret: bool) -> JaxprAnalysis:
+    """Fused-pattern pass over one jaxpr level.
+
+    * attention motifs: einsum-softmax-einsum chains rewritable as ONE
+      ``ops.attention`` call (``_match_attention``);
+    * grouped taint: values written by scatter-family primitives (the MoE
+      dispatch) taint everything downstream, and a batched ``dot_general``
+      whose lhs is tainted classifies as ``grouped_dense`` — its rows
+      were *routed* to slabs, so the uniform grouped kernel (numerically
+      identical to the batched one) keeps the site in the searched family
+      that also covers the ragged case.
+
+    Sub-jaxprs are analyzed separately by their own walk/eval level;
+    taint deliberately does not cross higher-order primitive boundaries.
+    """
+    producers: Dict[Any, Any] = {}
+    consumers: Dict[Any, List[Any]] = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.invars:
+            if isinstance(v, jcore.Var):
+                consumers.setdefault(v, []).append(eqn)
+        for v in eqn.outvars:
+            producers[v] = eqn
+    live_out = {v for v in jaxpr.outvars if isinstance(v, jcore.Var)}
+
+    analysis = JaxprAnalysis()
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name != "div":
+            continue
+        motif = _match_attention(
+            eqn, producers, consumers, live_out, interpret=interpret
+        )
+        if motif is None:
+            continue
+        if any(i in analysis.interior for i in motif.interior):
+            continue  # overlapping match: first one wins
+        analysis.motifs[id(eqn)] = motif
+        for i in motif.interior:
+            analysis.interior[i] = id(eqn)
+
+    tainted: set = set()
+    grouped: set = set()
+    for eqn in jaxpr.eqns:
+        hit = any(
+            isinstance(v, jcore.Var) and v in tainted for v in eqn.invars
+        )
+        if eqn.primitive.name == "dot_general" and hit:
+            lhs = eqn.invars[0]
+            if isinstance(lhs, jcore.Var) and lhs in tainted:
+                grouped.add(id(eqn))
+        if hit or eqn.primitive.name.startswith("scatter"):
+            tainted.update(eqn.outvars)
+    analysis.grouped = frozenset(grouped)
+    return analysis
 
 
 # ---------------------------------------------------------------------------
@@ -295,36 +593,50 @@ def harvest_jaxpr(
     """
     report = CaptureReport(label=label)
 
+    def blocked(site: CaptureSite, blocked_by: Optional[str]) -> None:
+        if site.dispatched and blocked_by is not None:
+            site.status = "fallback"
+            site.reason = (
+                "inside a higher-order primitive the rewriter "
+                f"does not re-emit ({blocked_by})"
+            )
+
     def walk(
         jaxpr: jcore.Jaxpr, trail: Tuple[str, ...],
         blocked_by: Optional[str],
     ):
+        analysis = analyze_jaxpr(jaxpr, interpret=interpret)
         for i, eqn in enumerate(jaxpr.eqns):
             name = eqn.primitive.name
+            motif = analysis.motifs.get(id(eqn))
+            if motif is not None:
+                site = motif.site
+                site.site_id = len(report.sites)
+                site.path = "/".join(trail + (f"eqn{i}",))
+                blocked(site, blocked_by)
+                report.sites.append(site)
+                continue
             if name == "dot_general":
+                if id(eqn) in analysis.interior:
+                    continue  # folded into an attention site above
                 site = classify_dot_general(
                     eqn.invars[0].aval, eqn.invars[1].aval,
                     eqn.outvars[0].aval, eqn.params,
                     interpret=interpret,
                     site_id=len(report.sites),
                     path="/".join(trail + (f"eqn{i}",)),
+                    grouped_lhs=id(eqn) in analysis.grouped,
                 )
-                if site.dispatched and blocked_by is not None:
-                    site.status = "fallback"
-                    site.reason = (
-                        "inside a higher-order primitive the rewriter "
-                        f"does not re-emit ({blocked_by})"
-                    )
+                blocked(site, blocked_by)
                 report.sites.append(site)
                 continue
             subs = _sub_jaxprs(eqn)
             if subs:
-                # the first non-rewritable ancestor blocks everything
-                # below it; keep naming *that* primitive, not nearer
-                # (rewritable) ancestors
-                block = blocked_by if blocked_by is not None else (
-                    None if name in REWRITABLE_HOPS else name
-                )
+                # a non-rewritable primitive blocks everything below it;
+                # report the NEAREST such ancestor (an inner blocker is
+                # the one that actually stops the rewrite, even when an
+                # outer one exists too)
+                block = name if name not in REWRITABLE_HOPS else blocked_by
                 for _, sub in subs:
                     walk(sub, trail + (name,), block)
 

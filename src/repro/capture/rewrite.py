@@ -71,26 +71,43 @@ def _interpret_default() -> bool:
 
 
 class _Ctx:
-    __slots__ = ("interpret", "dispatch", "site_memo", "contains_memo")
+    __slots__ = (
+        "interpret", "dispatch", "site_memo", "contains_memo",
+        "analysis_memo",
+    )
 
     def __init__(self, interpret: bool, dispatch: bool = True,
                  site_memo: Optional[dict] = None,
-                 contains_memo: Optional[dict] = None):
+                 contains_memo: Optional[dict] = None,
+                 analysis_memo: Optional[dict] = None):
         self.interpret = interpret
         self.dispatch = dispatch
-        # id(eqn) -> CaptureSite and id(jaxpr) -> bool; keyed by identity,
-        # which is stable for the lifetime of the traced _Entry that owns
-        # both the jaxpr and these memos
+        # id(eqn) -> CaptureSite, id(jaxpr) -> bool / JaxprAnalysis; keyed
+        # by identity, which is stable for the lifetime of the traced
+        # _Entry that owns both the jaxpr and these memos
         self.site_memo = {} if site_memo is None else site_memo
         self.contains_memo = {} if contains_memo is None else contains_memo
+        self.analysis_memo = {} if analysis_memo is None else analysis_memo
 
-    def classify(self, eqn) -> "object":
+    def analyze(self, jaxpr):
+        """Per-level fused-pattern facts (attention motifs, grouped taint),
+        the same pass the harvest report is built from."""
+        from .harvest import analyze_jaxpr
+
+        hit = self.analysis_memo.get(id(jaxpr))
+        if hit is None:
+            hit = analyze_jaxpr(jaxpr, interpret=self.interpret)
+            self.analysis_memo[id(jaxpr)] = hit
+        return hit
+
+    def classify(self, eqn, grouped_lhs: bool = False) -> "object":
         site = self.site_memo.get(id(eqn))
         if site is None:
             site = classify_dot_general(
                 eqn.invars[0].aval, eqn.invars[1].aval,
                 eqn.outvars[0].aval, eqn.params,
                 interpret=self.interpret,
+                grouped_lhs=grouped_lhs,
             )
             self.site_memo[id(eqn)] = site
         return site
@@ -153,6 +170,13 @@ def _apply_site(site, lhs, rhs, interpret: bool):
         return ops.batched_dense(
             lhs, rhs, out_dtype=site.out_dtype, interpret=interpret
         )
+    if site.op == "grouped_dense":
+        b, m, d = site.lhs_shape
+        out = ops.grouped_dense(
+            lhs.reshape(b * m, d), rhs, (m,) * b,
+            out_dtype=site.out_dtype, interpret=interpret,
+        )
+        return out.reshape(site.out_shape)
     raise AssertionError(f"unhandled capture op {site.op!r}")
 
 
@@ -172,12 +196,39 @@ def _eval_jaxpr(
     write_all(jaxpr.constvars, closed.consts)
     write_all(jaxpr.invars, args)
 
+    analysis = ctx.analyze(jaxpr)
+
     for i, eqn in enumerate(jaxpr.eqns):
-        invals = [read(x) for x in eqn.invars]
         name = eqn.primitive.name
 
+        if ctx.dispatch:
+            motif = analysis.motifs.get(id(eqn))
+            if motif is not None and motif.site.dispatched:
+                # terminal of a matched attention chain: the whole region
+                # collapses into one fused op on the chain's roots
+                from .. import ops
+
+                out = ops.attention(
+                    read(motif.q), read(motif.k), read(motif.v),
+                    causal=motif.causal,
+                    out_dtype=motif.site.out_dtype,
+                    interpret=ctx.interpret,
+                )
+                write_all(eqn.outvars, [out])
+                continue
+            owner = analysis.interior.get(id(eqn))
+            if owner is not None and \
+                    analysis.motifs[owner].site.dispatched:
+                # interior of a dispatching motif: its value is never
+                # observed outside the chain (verified at match time)
+                continue
+
+        invals = [read(x) for x in eqn.invars]
+
         if name == "dot_general":
-            site = ctx.classify(eqn)
+            site = ctx.classify(
+                eqn, grouped_lhs=id(eqn) in analysis.grouped
+            )
             if ctx.dispatch and site.dispatched:
                 outs = [_apply_site(site, invals[0], invals[1], ctx.interpret)]
             else:

@@ -54,13 +54,20 @@ CACHE_VERSION = 1
 def spec_signature(spec: ContractionSpec) -> Dict[str, Any]:
     """Stable JSON identity of a ROOT contraction (shapes included)."""
     root = spec.root()
-    return {
+    sig = {
         "name": root.name,
         "operands": {k: list(v) for k, v in root.operands.items()},
         "output": list(root.output),
         "extents": {k: int(v) for k, v in root.extents.items()},
         "reducer": root.reducer,
     }
+    # fused families (attention/grouped_matmul) carry semantics the plain
+    # fields cannot express (causal flag, ragged group sizes) — fold them
+    # in ONLY when present so every existing key stays byte-identical
+    kind = getattr(root, "fused_kind", None)
+    if kind:
+        sig["fused"] = {"kind": kind, **root.fused_meta()}
+    return sig
 
 
 def hardware_fingerprint() -> str:

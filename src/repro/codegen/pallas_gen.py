@@ -297,6 +297,14 @@ def compile_kernel(
         or spec.root().extents != schedule.spec.root().extents
     ):
         raise ValueError("spec and schedule disagree on the root contraction")
+    if getattr(spec.root(), "fused_kind", ""):
+        from .fused_gen import compile_fused
+
+        return compile_fused(
+            spec, schedule,
+            epilogue=epilogue, out_dtype=out_dtype, interpret=interpret,
+            mesh=mesh, collective=collective,
+        )
     from ..obs import span
 
     with span("codegen.compile", spec=spec.root().name,

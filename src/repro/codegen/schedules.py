@@ -22,6 +22,20 @@ explores loop orders and per-tier blockings around it
 (``search.space.candidate_schedule`` generalizes this builder to
 arbitrary loop orders) and only keeps a variant if it measures faster —
 ``ops.dense`` asks the search's plan DB before falling back here.
+
+Fused families reinterpret one tier rather than add new ones.  For
+``AttentionSpec`` the ``seq`` tier over the KV axis ``t`` is the
+**online-softmax** reduction (``codegen.fused_gen``): each ``t``-block
+step computes a score tile, folds it into running row-max ``m`` and
+row-sum ``l`` VMEM scratch, and *rescales* the f32 accumulator by
+``exp(m_old - m_new)`` before adding the new ``P·V`` contribution — the
+flash-attention recurrence, so blocking ``t`` changes arithmetic order
+but never semantics.  That is why ``t`` is a legal chunk axis while the
+head dims ``d``/``e`` are ``whole_indices`` (a blocked softmax over a
+*partial* feature axis has no such rescaling identity, so the search
+space pins them to full extent; same for grouped's ``g``/``k``).  A map
+index left unblocked lowers exactly as in the plain path, so searched
+attention schedules differ only in grid order and ``s``/``t`` blockings.
 """
 
 from __future__ import annotations

@@ -117,9 +117,12 @@ def candidate_blocks(
     """Cross-product of pow2 MAP-index block candidates; batch-like dims
     pinned near 1, reduce indices fixed to their heuristic chunk."""
     choices: List[Tuple[str, List[int]]] = []
+    whole = getattr(spec.root(), "whole_indices", ())
     for i in spec.indices:
         e = spec.extents[i]
-        if i not in spec.output:
+        if i in whole:
+            cands = [e]  # fused families keep these axes unblocked
+        elif i not in spec.output:
             cands = [_reduce_chunk(e)]
         elif e <= hw["sublane"]:
             cands = [1, e] if e > 1 else [1]  # batch-like tiny dims

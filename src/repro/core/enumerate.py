@@ -253,6 +253,116 @@ def transposed_matmul_spec(n: int, m: int, k: int) -> ContractionSpec:
     )
 
 
+# fused kernel families ------------------------------------------------------
+#
+# A fused spec is still a ContractionSpec — its operands/output/extents
+# drive the generic enumerate->search->plan machinery unchanged — but the
+# innermost semantics are NOT a plain product-reduce: `fused_kind` names a
+# dedicated Pallas lowering in ``codegen.fused_gen`` and every einsum-based
+# consumer (measurement oracle, grad fallbacks) must branch on it.
+# ``whole_indices`` are axes the fused kernel keeps unblocked (attention's
+# head dims; grouped's group/contraction axes) — the search space pins them.
+# NOTE: ``subdivide`` returns a plain ContractionSpec, so fused detection
+# must always go through ``getattr(spec.root(), "fused_kind", "")``.
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec(ContractionSpec):
+    """Fused QK^T -> online-softmax -> PV attention.
+
+    out[h,s,e] = sum_t softmax_t(Q[h,s,:]·K[h,t,:] / sqrt(d) + mask) V[h,t,e]
+
+    The KV sequence axis ``t`` is the in-schedule reduction tier: the
+    generated kernel walks its blocks sequentially carrying running
+    max/sum state in VMEM (flash-attention style), so ``t`` is a legal
+    seq-tier chunk axis while ``d``/``e`` stay whole.
+    """
+
+    causal: bool = False
+
+    fused_kind = "attention"
+    whole_indices = ("d", "e")
+
+    def flops(self) -> int:
+        h, s, t = self.extents["h"], self.extents["s"], self.extents["t"]
+        d, e = self.extents["d"], self.extents["e"]
+        # two GEMMs plus the softmax exp/rescale work per score
+        return 2 * h * s * t * d + 2 * h * s * t * e + 4 * h * s * t
+
+    def fused_meta(self) -> Dict[str, object]:
+        return {"causal": bool(self.causal)}
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedSpec(ContractionSpec):
+    """Ragged grouped matmul — MoE expert dispatch as ONE contraction.
+
+    out[n,f] = x[n,:] @ w[group(n),:,:] where rows are partitioned into
+    ``len(group_sizes)`` contiguous groups (sum(group_sizes) == extent of
+    ``n``).  Lowered as a group-offset Pallas grid; groups may be empty.
+    """
+
+    group_sizes: Tuple[int, ...] = ()
+
+    fused_kind = "grouped_matmul"
+    whole_indices = ("g", "k")
+
+    @property
+    def indices(self) -> Tuple[str, ...]:
+        # the derived dW spec has `g` only in its OUTPUT (the group axis
+        # of a ragged contraction maps rows to slabs via group_sizes, not
+        # via an operand index), so output axes join the index set here
+        seen = list(super().indices)
+        for i in self.output:
+            if i not in seen:
+                seen.append(i)
+        return tuple(seen)
+
+    def flops(self) -> int:
+        k = self.extents["k"]
+        f = self.extents["f"]
+        return sum(2 * s * k * f for s in self.group_sizes)
+
+    def fused_meta(self) -> Dict[str, object]:
+        return {"group_sizes": list(self.group_sizes)}
+
+
+def attention_spec(
+    h: int, s: int, t: int, d: int, e: int = None, causal: bool = False
+) -> AttentionSpec:
+    """Fused attention over folded heads: Q(h,s,d) K(h,t,d) V(h,t,e)."""
+    if e is None:
+        e = d
+    return AttentionSpec(
+        name="attention",
+        operands={"Q": ("h", "s", "d"), "K": ("h", "t", "d"), "V": ("h", "t", "e")},
+        output=("h", "s", "e"),
+        extents={"h": h, "s": s, "t": t, "d": d, "e": e},
+        causal=causal,
+    )
+
+
+def grouped_matmul_spec(
+    group_sizes: Sequence[int], k: int, f: int
+) -> GroupedSpec:
+    """Ragged per-group GEMM: x(n,k) w(g,k,f) -> out(n,f), n = sum(groups)."""
+    sizes = tuple(int(s) for s in group_sizes)
+    if any(s < 0 for s in sizes) or not sizes:
+        raise ValueError(f"bad group_sizes {sizes}")
+    return GroupedSpec(
+        name="grouped_matmul",
+        operands={"X": ("n", "k"), "W": ("g", "k", "f")},
+        output=("n", "f"),
+        extents={"n": max(sum(sizes), 1), "k": k, "f": f, "g": len(sizes)},
+        group_sizes=sizes,
+    )
+
+
+def uniform_grouped_spec(g: int, m: int, k: int, f: int) -> GroupedSpec:
+    """CLI-friendly grouped ctor: g uniform groups of m rows each."""
+    return grouped_matmul_spec((m,) * g, k, f)
+
+
 def tensor_contraction_spec(n: int, m: int, k: int, p: int, q: int) -> ContractionSpec:
     """C_ipq = sum_jk A_ijk B_jp C_kq g_j f_k (paper eq 7, PDE-style)."""
     return ContractionSpec(

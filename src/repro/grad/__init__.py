@@ -25,17 +25,20 @@ forward: ``search.search_schedule_with_grads`` /
 from .derive import COTANGENT, derived_spec, derived_specs
 from .vjp import (
     apply_spec,
+    attention_vjp,
     batched_dense_vjp,
     chain_dense_vjp,
     dense_act_vjp,
     dense_transposed_vjp,
     dense_vjp,
+    grouped_vjp,
     weighted_dense_vjp,
 )
 
 __all__ = [
     "COTANGENT",
     "apply_spec",
+    "attention_vjp",
     "batched_dense_vjp",
     "chain_dense_vjp",
     "dense_act_vjp",
@@ -43,5 +46,6 @@ __all__ = [
     "dense_vjp",
     "derived_spec",
     "derived_specs",
+    "grouped_vjp",
     "weighted_dense_vjp",
 ]

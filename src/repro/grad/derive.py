@@ -56,6 +56,71 @@ def _check_differentiable(root: ContractionSpec) -> None:
         )
 
 
+def _fused_derived(root: ContractionSpec) -> Dict[str, ContractionSpec]:
+    """Backward specs of the fused families.
+
+    A fused forward is not a sum-of-products, so the generic index
+    calculus does not apply; instead these are the GEMMs the fused
+    custom VJPs (``grad.vjp.attention_vjp`` / ``grouped_vjp``) actually
+    execute, each a first-class spec with its own plan-DB/autotune key:
+
+    attention (dS = P∘(dP − D) computed elementwise in the VJP):
+        dQ[h,s,d] = Σ_t dS[h,s,t] K[h,t,d]   (``dout`` carries dS)
+        dK[h,t,d] = Σ_s dS[h,s,t] Q[h,s,d]
+        dV[h,t,e] = Σ_s  P[h,s,t] g[h,s,e]   (``dout`` carries g)
+    grouped_matmul (both still ragged — GroupedSpecs with the same
+    ``group_sizes``, lowered by the same group-offset kernel modes):
+        dX[n,k]   = Σ_f g[n,f] W[group(n),k,f]
+        dW[g,k,f] = Σ_{n∈group g} X[n,k] g[n,f]
+    """
+    kind = root.fused_kind
+    ex = root.extents
+    if kind == "attention":
+        h, s, t = ex["h"], ex["s"], ex["t"]
+        d, e = ex["d"], ex["e"]
+        return {
+            "Q": ContractionSpec(
+                name="attention.dQ",
+                operands={COTANGENT: ("h", "s", "t"), "K": ("h", "t", "d")},
+                output=("h", "s", "d"),
+                extents={"h": h, "s": s, "t": t, "d": d},
+            ),
+            "K": ContractionSpec(
+                name="attention.dK",
+                operands={COTANGENT: ("h", "s", "t"), "Q": ("h", "s", "d")},
+                output=("h", "t", "d"),
+                extents={"h": h, "s": s, "t": t, "d": d},
+            ),
+            "V": ContractionSpec(
+                name="attention.dV",
+                operands={COTANGENT: ("h", "s", "e"), "P": ("h", "s", "t")},
+                output=("h", "t", "e"),
+                extents={"h": h, "s": s, "t": t, "e": e},
+            ),
+        }
+    if kind == "grouped_matmul":
+        from ..core.enumerate import GroupedSpec
+
+        sizes = root.group_sizes
+        return {
+            "X": GroupedSpec(
+                name="grouped_matmul.dX",
+                operands={COTANGENT: ("n", "f"), "W": ("g", "k", "f")},
+                output=("n", "k"),
+                extents=dict(ex),
+                group_sizes=sizes,
+            ),
+            "W": GroupedSpec(
+                name="grouped_matmul.dW",
+                operands={COTANGENT: ("n", "f"), "X": ("n", "k")},
+                output=("g", "k", "f"),
+                extents=dict(ex),
+                group_sizes=sizes,
+            ),
+        }
+    raise NotImplementedError(f"no derived specs for fused kind {kind!r}")
+
+
 def derived_spec(spec: ContractionSpec, wrt: str) -> ContractionSpec:
     """The backward contraction for ``d loss / d wrt`` of a forward spec.
 
@@ -64,8 +129,18 @@ def derived_spec(spec: ContractionSpec, wrt: str) -> ContractionSpec:
     every forward operand except ``wrt`` in their original order, and whose
     output axes are ``wrt``'s axes in *storage* order — so the kernel's
     result drops straight into the cotangent slot with no transpose.
+
+    Fused families (``fused_kind`` set) branch to ``_fused_derived`` —
+    their backward contractions are hand-derived, not index calculus.
     """
     root = spec.root()
+    if getattr(root, "fused_kind", ""):
+        fused = _fused_derived(root)
+        if wrt not in fused:
+            raise ValueError(
+                f"unknown operand {wrt!r}; spec has {tuple(root.operands)}"
+            )
+        return fused[wrt]
     _check_differentiable(root)
     if wrt not in root.operands:
         raise ValueError(

@@ -266,6 +266,150 @@ def dense_transposed_vjp(out_dtype: str, interpret: bool):
 
 
 @functools.lru_cache(maxsize=None)
+def attention_vjp(causal: bool, out_dtype: str, interpret: bool):
+    """Fused attention with a flash-style recompute backward.
+
+    The forward (``ops._attention_raw``) never materializes the (s, t)
+    probability matrix; the backward recomputes scores -> P in f32, forms
+    dS = P∘(dP − D) elementwise, then routes the three surviving GEMMs
+    through the hand-derived fused specs (``attention.dQ/.dK/.dV`` —
+    ``grad.derive._fused_derived``), each with its own plan-DB/autotune
+    key.  Only the ``kv_lengths=None`` call sites wrap in this vjp; the
+    ragged-lengths path stays on the natively-differentiable jnp
+    reference (integer lengths make a poor custom_vjp residual).
+    """
+    import math
+
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        from .. import ops
+
+        return ops._attention_raw(
+            q, k, v, causal=causal, kv_lengths=None,
+            out_dtype=out_dt, interpret=interpret,
+        )
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        from .. import ops
+        from ..core.enumerate import attention_spec
+
+        q, k, v = res
+        h, s, d = q.shape
+        t = k.shape[1]
+        e = v.shape[2]
+        spec = attention_spec(h, s, t, d, e=e, causal=causal)
+        dsp = derived_specs(spec)
+        use_kernel = ops._attention_kernel_ok(q, interpret)
+        scale = 1.0 / math.sqrt(d)
+
+        sc = jnp.einsum(
+            "hsd,htd->hst", q, k, preferred_element_type=jnp.float32
+        ) * scale
+        if causal:
+            row = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+            col = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 2)
+            sc = jnp.where(col <= row, sc, -jnp.inf)
+        # every row keeps its diagonal under the causal mask, so the max
+        # is finite and the softmax denominator is strictly positive
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        big_p = p / jnp.sum(p, axis=-1, keepdims=True)
+
+        gf = g.astype(jnp.float32)
+        dv = apply_spec(
+            dsp["V"],
+            {COTANGENT: g.astype(v.dtype), "P": big_p.astype(v.dtype)},
+            out_dtype=v.dtype, interpret=interpret, use_kernel=use_kernel,
+        )
+        dp = jnp.einsum(
+            "hse,hte->hst", gf, v.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        dterm = jnp.sum(dp * big_p, axis=-1, keepdims=True)
+        ds = big_p * (dp - dterm) * scale
+        dq = apply_spec(
+            dsp["Q"], {COTANGENT: ds.astype(q.dtype), "K": k},
+            out_dtype=q.dtype, interpret=interpret, use_kernel=use_kernel,
+        )
+        dk = apply_spec(
+            dsp["K"], {COTANGENT: ds.astype(k.dtype), "Q": q},
+            out_dtype=k.dtype, interpret=interpret, use_kernel=use_kernel,
+        )
+        return dq, dk, dv
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def grouped_vjp(group_sizes: tuple, out_dtype: str, interpret: bool):
+    """Ragged grouped GEMM: backward stays ragged, never sums over groups.
+
+    Both cotangents are GroupedSpecs with the same ``group_sizes``
+    (``grouped_matmul.dX/.dW``), lowered by the same group-offset kernel
+    modes as the forward.  The generic einsum fallback of ``apply_spec``
+    would be *wrong* here (a plain einsum sums over the group axis), so
+    the non-kernel path is an explicit per-group loop.
+    """
+    out_dt = np.dtype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w):
+        from .. import ops
+
+        return ops._grouped_raw(x, w, group_sizes, out_dt, interpret)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        from .. import ops
+        from ..core.enumerate import grouped_matmul_spec
+
+        x, w = res
+        n, kdim = x.shape
+        _, _, fdim = w.shape
+        if n and ops._grouped_kernel_ok(x, interpret):
+            spec = grouped_matmul_spec(group_sizes, kdim, fdim)
+            dsp = derived_specs(spec)
+            dx = apply_spec(
+                dsp["X"], {COTANGENT: g.astype(x.dtype), "W": w},
+                out_dtype=x.dtype, interpret=interpret, use_kernel=True,
+            )
+            dw = apply_spec(
+                dsp["W"], {COTANGENT: g.astype(w.dtype), "X": x},
+                out_dtype=w.dtype, interpret=interpret, use_kernel=True,
+            )
+            return dx, dw
+        gf = g.astype(jnp.float32)
+        xf = x.astype(jnp.float32)
+        dx_parts, dw_parts = [], []
+        off = 0
+        for gi, size in enumerate(group_sizes):
+            wg = w[gi].astype(jnp.float32)
+            if size:
+                dx_parts.append(gf[off:off + size] @ wg.T)
+                dw_parts.append(xf[off:off + size].T @ gf[off:off + size])
+            else:
+                dw_parts.append(jnp.zeros_like(wg))
+            off += size
+        dx = (
+            jnp.concatenate(dx_parts, axis=0)
+            if dx_parts else jnp.zeros((n, kdim), jnp.float32)
+        )
+        dw = jnp.stack(dw_parts, axis=0)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
 def dense_act_vjp(act: str, eps: float, out_dtype: str, interpret: bool):
     """Fused dense+bias+norm+act with an epilogue-aware backward.
 

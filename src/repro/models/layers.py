@@ -236,6 +236,33 @@ def blockwise_attention(
     nq, nk = S // q_block, T // k_block
     scale = hd ** -0.5
 
+    if nq == 1 and nk == 1 and kv_lengths is None:
+        # Single-block path: one unblocked softmax-attention, emitted as
+        # the exact primitive chain ``capture.harvest`` recognizes as the
+        # fused-attention motif (fold heads -> QK^T -> scale -> [iota
+        # causal mask] -> max-shift -> exp -> PV -> div by rowsum), so
+        # ``capture.optimize`` can dispatch it through ``ops.attention``.
+        # Numerically identical to the blockwise path at nq == nk == 1
+        # (same f32 accumulation, no rescale steps).
+        qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+        kx = k if G == 1 else jnp.repeat(k, G, axis=2)
+        vx = v if G == 1 else jnp.repeat(v, G, axis=2)
+        kh = kx.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+        vh = vx.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+        s = jnp.einsum(
+            "hsd,htd->hst", qh.astype(F32), kh.astype(F32)
+        ) * scale
+        if causal:
+            row = lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            col = lax.broadcasted_iota(jnp.int32, s.shape, 2)
+            s = jnp.where(col <= row, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        num = jnp.einsum("hst,hte->hse", p, vh.astype(F32))
+        out = num / jnp.sum(p, axis=-1, keepdims=True)
+        out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        return out.astype(q.dtype)
+
     qs = q.reshape(B, nq, q_block, KV, G, hd)
     ks = k.reshape(B, nk, k_block, KV, hd).transpose(1, 0, 2, 3, 4)
     vs = v.reshape(B, nk, k_block, KV, hd).transpose(1, 0, 2, 3, 4)

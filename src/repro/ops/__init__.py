@@ -377,6 +377,175 @@ def _dense_act_raw(x, w, beta, mean, var, *, act, eps, out_dtype, interpret):
     ).astype(out_dtype)
 
 
+def _attention_kernel_ok(q, interpret: bool) -> bool:
+    return (_use_pallas() or interpret) and q.ndim == 3
+
+
+def _attention_ref_jnp(q, k, v, *, causal, kv_lengths, out_dtype):
+    """Pure-jnp fused-attention reference: f32 stable softmax + masks.
+
+    Fully-masked rows (possible only under ``kv_lengths``) produce exact
+    zeros, matching the generated kernel's ``l == 0`` guard.
+    """
+    import math
+
+    h, s, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    sc = jnp.einsum(
+        "hsd,htd->hst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    valid = jnp.ones((h, s, t), dtype=bool)
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (h, s, t), 1)
+        col = jax.lax.broadcasted_iota(jnp.int32, (h, s, t), 2)
+        valid &= col <= row
+    if kv_lengths is not None:
+        col = jax.lax.broadcasted_iota(jnp.int32, (h, s, t), 2)
+        valid &= col < kv_lengths.astype(jnp.int32).reshape(h, 1, 1)
+    sc = jnp.where(valid, sc, -jnp.inf)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - jnp.where(jnp.isfinite(m), m, 0.0))
+    p = jnp.where(valid, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum(
+        "hst,hte->hse", p, v, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def _attention_raw(q, k, v, *, causal, kv_lengths, out_dtype, interpret):
+    if _attention_kernel_ok(q, interpret):
+        from ..core.enumerate import attention_spec
+
+        h, s, d = q.shape
+        t = k.shape[1]
+        e = v.shape[2]
+        kern = _tuned_kernel(
+            attention_spec(h, s, t, d, e=e, causal=causal),
+            q.dtype, interpret=interpret,
+        )
+        if kv_lengths is not None:
+            return kern(q, k, v, kv_lengths=kv_lengths).astype(out_dtype)
+        return kern(q, k, v).astype(out_dtype)
+    return _attention_ref_jnp(
+        q, k, v, causal=causal, kv_lengths=kv_lengths, out_dtype=out_dtype
+    )
+
+
+def attention(q, k, v, *, causal: bool = False, kv_lengths=None,
+              out_dtype=None, interpret: bool = False,
+              differentiable: bool = True):
+    """Fused QK^T -> online-softmax -> PV through the searched kernel.
+
+    q: (H, S, D), k: (H, T, D), v: (H, T, E) -> (H, S, E).  Scores are
+    scaled by D^-0.5 and accumulated in f32; the KV axis runs as an
+    in-schedule reduction tier carrying running max/sum in VMEM, so the
+    (S, T) probability matrix never exists in HBM
+    (``codegen.fused_gen``).  ``kv_lengths`` (per-head int32, PR 7's
+    paged-KV convention) masks columns ``>= length``; rows with no valid
+    column return exact zeros.
+
+    Differentiable calls without lengths wrap in ``grad.attention_vjp``
+    (flash-style recompute backward whose GEMMs are the hand-derived
+    ``attention.dQ/.dK/.dV`` specs); ``kv_lengths`` + ``differentiable``
+    routes to the natively-differentiable jnp reference instead.
+    """
+    out_dtype = out_dtype or q.dtype
+    if q.ndim != 3 or k.ndim != 3 or v.ndim != 3:
+        raise ValueError(
+            f"attention expects 3-D (H, S|T, D|E) operands; got "
+            f"{q.shape}, {k.shape}, {v.shape}"
+        )
+    if differentiable and kv_lengths is not None:
+        return _attention_ref_jnp(
+            q, k, v, causal=causal, kv_lengths=kv_lengths,
+            out_dtype=out_dtype,
+        )
+    if differentiable and _attention_kernel_ok(q, interpret):
+        from ..grad import attention_vjp
+
+        return attention_vjp(
+            bool(causal), _dt_name(out_dtype), bool(interpret)
+        )(q, k, v)
+    return _attention_raw(
+        q, k, v, causal=causal, kv_lengths=kv_lengths,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+
+
+def _grouped_kernel_ok(x, interpret: bool) -> bool:
+    return (_use_pallas() or interpret) and x.ndim == 2
+
+
+def _grouped_ref_jnp(x, w, group_sizes, out_dtype):
+    """Static per-group dot loop — the semantic definition of the op."""
+    parts = []
+    off = 0
+    for g, size in enumerate(group_sizes):
+        if size:
+            parts.append(jax.lax.dot_general(
+                x[off:off + size], w[g],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ))
+        off += size
+    if not parts:
+        return jnp.zeros((x.shape[0], w.shape[-1]), out_dtype)
+    return jnp.concatenate(parts, axis=0).astype(out_dtype)
+
+
+def _grouped_raw(x, w, group_sizes, out_dtype, interpret):
+    if x.shape[0] and _grouped_kernel_ok(x, interpret):
+        from ..core.enumerate import grouped_matmul_spec
+
+        kern = _tuned_kernel(
+            grouped_matmul_spec(group_sizes, x.shape[1], w.shape[2]),
+            x.dtype, interpret=interpret,
+        )
+        return kern(x, w).astype(out_dtype)
+    return _grouped_ref_jnp(x, w, group_sizes, out_dtype)
+
+
+def grouped_dense(x, w, group_sizes, *, out_dtype=None,
+                  interpret: bool = False, differentiable: bool = True):
+    """Ragged grouped GEMM: row block g of ``x`` hits expert matrix w[g].
+
+    x: (N, K) with N = sum(group_sizes), w: (G, K, F) -> (N, F).  One
+    searched kernel walks the static group offsets in its Pallas grid
+    (``codegen.fused_gen``) instead of G separate dispatches — the MoE
+    expert-FFN pattern (``models.moe``).  Empty and size-1 groups are
+    legal; empty groups contribute no rows and cost no grid steps.
+
+    The backward specs stay ragged (``grouped_matmul.dX/.dW`` are
+    GroupedSpecs with the same sizes) — a plain einsum would wrongly sum
+    over the group axis, so even the fallback VJP is a per-group loop.
+    """
+    out_dtype = out_dtype or x.dtype
+    group_sizes = tuple(int(s) for s in group_sizes)
+    if x.ndim != 2 or w.ndim != 3:
+        raise ValueError(
+            f"grouped_dense expects x (N, K) and w (G, K, F); got "
+            f"{x.shape}, {w.shape}"
+        )
+    if len(group_sizes) != w.shape[0]:
+        raise ValueError(
+            f"{len(group_sizes)} group sizes for {w.shape[0]} expert slabs"
+        )
+    if sum(group_sizes) != x.shape[0]:
+        raise ValueError(
+            f"group sizes sum to {sum(group_sizes)} but x has "
+            f"{x.shape[0]} rows"
+        )
+    if differentiable and x.shape[0] and _grouped_kernel_ok(x, interpret):
+        from ..grad import grouped_vjp
+
+        return grouped_vjp(
+            group_sizes, _dt_name(out_dtype), bool(interpret)
+        )(x, w)
+    return _grouped_raw(x, w, group_sizes, out_dtype, interpret)
+
+
 def dense_act(
     x, w, beta, mean, var,
     *, act: str = "gelu", eps: float = 1e-5,

@@ -90,6 +90,41 @@ def sharded_reduce_seconds(
         return max(rs - compute_s, 0.0) + ag
     return collective_seconds("psum", nbytes, shards, hw_ici_bw)
 
+
+def attention_rescale_seconds(
+    h: int, s: int, e: int, t_steps: int, peak: float = PEAK_FLOPS
+) -> float:
+    """VPU time of the online-softmax running state per KV block.
+
+    Every sequential KV step of the fused attention kernel rescales the
+    (h, s) running max/sum and the (h, s, e) accumulator by
+    ``alpha = exp(m_prev - m_next)`` — roughly ``e + 4`` elementwise ops
+    per query row per step, work that a one-pass softmax (``t_steps == 1``)
+    does not pay.  The beam adds this term so it can trade smaller KV
+    chunks (less VMEM) against the extra rescale traffic; with ``t``
+    defaulted to its whole extent the term is minimal, which keeps the
+    bound cut sound for partial states.
+    """
+    return t_steps * h * s * (e + 4) / peak
+
+
+def grouped_tail_factor(group_sizes, bm: int) -> float:
+    """Occupancy loss of the ragged tails in a grouped matmul, >= 1.
+
+    The group-offset kernel walks each group's rows in ``bm``-sized tiles,
+    so a group of ``s_g`` rows issues ``ceil(s_g / bm)`` tiles and the
+    MXU processes ``ceil(s_g / bm) * bm`` rows of work for ``s_g`` rows of
+    output.  The factor is the issued/useful row ratio over all groups —
+    1.0 when every group size divides ``bm``; empty groups cost nothing
+    (their tile loop is skipped entirely).
+    """
+    useful = sum(group_sizes)
+    if useful <= 0 or bm <= 0:
+        return 1.0
+    issued = sum(-(-s // bm) * bm for s in group_sizes if s > 0)
+    return max(issued / useful, 1.0)
+
+
 _SUGGEST = {
     "compute": "raise arithmetic efficiency: larger per-chip batch or less "
                "remat recompute (MODEL/HLO flops ratio shows the headroom)",

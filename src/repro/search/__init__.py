@@ -38,11 +38,13 @@ from .. import obs
 from ..core.cost import TPU
 from ..core.enumerate import (
     ContractionSpec,
+    attention_spec,
     batched_matmul_spec,
     chain_matmul_spec,
     matmul_spec,
     matvec_spec,
     transposed_matmul_spec,
+    uniform_grouped_spec,
     weighted_matmul_spec,
 )
 from ..core.schedule import Schedule
@@ -85,6 +87,11 @@ SPEC_FAMILIES = {
     "batched_matmul": (batched_matmul_spec, 4),
     "chain_matmul": (chain_matmul_spec, 4),
     "transposed_matmul": (transposed_matmul_spec, 3),
+    # fused families: attention takes (heads, q_seq, kv_seq, head_dim);
+    # grouped_matmul takes (groups, rows_per_group, k, f) — the CLI's
+    # uniform-partition entry into the ragged GroupedSpec
+    "attention": (attention_spec, 4),
+    "grouped_matmul": (uniform_grouped_spec, 4),
 }
 
 

@@ -126,6 +126,26 @@ def estimate(
     hbm_s = traffic * elem_bytes / hw["hbm_bw"]
     compute_s = spec.flops() / shards / hw["peak_flops"]
 
+    # fused-family terms.  Both stay sound for the bound cut: unassigned
+    # indices default to whole extents, which minimizes the attention
+    # rescale term (t_steps = 1), and the grouped ragged-tail factor only
+    # applies once the row-tile choice is actually decided.
+    kind = getattr(spec, "fused_kind", "")
+    if kind == "attention":
+        from ..roofline.analysis import attention_rescale_seconds
+
+        compute_s += attention_rescale_seconds(
+            extents["h"], extents["s"], extents["e"],
+            extents["t"] // blocks["t"],
+            peak=hw["peak_flops"],
+        )
+    elif kind == "grouped_matmul" and "n" in (
+        assigned if assigned is not None else frozenset(spec.indices)
+    ):
+        from ..roofline.analysis import grouped_tail_factor
+
+        compute_s *= grouped_tail_factor(spec.group_sizes, blocks["n"])
+
     # communication: a mesh-sharded reduce index leaves every device with a
     # partial local output that a collective must finish
     comm_s = 0.0

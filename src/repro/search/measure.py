@@ -100,10 +100,59 @@ def reference_arrays(
 def einsum_reference(
     spec: ContractionSpec, arrays: Dict[str, np.ndarray]
 ) -> np.ndarray:
-    """np.einsum oracle for a root spec (f64 accumulation)."""
+    """np.einsum oracle for a root spec (f64 accumulation).
+
+    Fused families are not single einsums — attention gets a stable f64
+    softmax oracle, grouped_matmul a per-group f64 loop.
+    """
     from ..core.enumerate import einsum_formula
 
     spec = spec.root()
+    kind = getattr(spec, "fused_kind", "")
+    if kind == "attention":
+        q, k, v = (
+            np.asarray(arrays[n], np.float64) for n in ("Q", "K", "V")
+        )
+        s = np.einsum("hsd,htd->hst", q, k) * spec.extents["d"] ** -0.5
+        if spec.causal:
+            t_ids = np.arange(spec.extents["t"])[None, None, :]
+            s_ids = np.arange(spec.extents["s"])[None, :, None]
+            s = np.where(t_ids <= s_ids, s, -np.inf)
+        p = np.exp(s - s.max(axis=-1, keepdims=True))
+        p = p / p.sum(axis=-1, keepdims=True)
+        return np.einsum("hst,hte->hse", p, v)
+    if kind == "grouped_matmul":
+        names = tuple(spec.operands)
+        vals = {n: np.asarray(arrays[n], np.float64) for n in names}
+        sizes = spec.group_sizes
+        if "g" in spec.output:  # dW orientation: out[g,o1,o2]
+            _, o1, o2 = spec.output
+            lhs = next(n for n in names if o1 in spec.operands[n])
+            rhs = next(n for n in names if o2 in spec.operands[n])
+            out = np.zeros(
+                tuple(spec.extents[i] for i in spec.output), np.float64
+            )
+            o = 0
+            for g, s_g in enumerate(sizes):
+                out[g] = vals[lhs][o : o + s_g].T @ vals[rhs][o : o + s_g]
+                o += s_g
+            return out
+        # row orientation (fwd / dX): out[n, oc]
+        xname, wname = names
+        oc = spec.output[1]
+        c = spec.operands[xname][1]
+        w_axes = spec.operands[wname]
+        out = np.zeros(
+            tuple(spec.extents[i] for i in spec.output), np.float64
+        )
+        o = 0
+        for g, s_g in enumerate(sizes):
+            wg = vals[wname][g]
+            if w_axes.index(c) == 2:  # shared axis last -> transpose
+                wg = wg.T
+            out[o : o + s_g] = vals[xname][o : o + s_g] @ wg
+            o += s_g
+        return out
     return np.einsum(
         einsum_formula(spec),
         *(np.asarray(arrays[n], np.float64) for n in spec.operands),

@@ -417,9 +417,15 @@ def block_choices(
     inside ``shard_map``)."""
     spec = spec.root()
     loc = local_extents(spec, mesh)
+    # fused families pin some axes whole: attention's head dims live
+    # entirely inside one MXU pass, grouped's group/contraction axes are
+    # realized by the group-offset grid, not by blocking
+    whole = getattr(spec, "whole_indices", ())
     return {
         i: (
-            map_block_choices(loc[i], hw, per_index)
+            [loc[i]]
+            if i in whole
+            else map_block_choices(loc[i], hw, per_index)
             if i in spec.output
             else seq_chunk_choices(loc[i], hw)
         )

@@ -1,0 +1,348 @@
+"""Differential oracle matrix for the fused attention family (ISSUE 8).
+
+Every case pins the generated flash-style Pallas kernel (interpret mode)
+against two independent references:
+
+  * a pure-softmax oracle with f64 accumulation
+    (``search.einsum_reference`` branches on ``fused_kind``), and
+  * the HoF reference interpreter (``core.interp`` via
+    ``evaluate_variant``) composed as QK^T GEMM -> explicit softmax ->
+    PV GEMM — the *unfused* three-node program the capture layer matches.
+
+Cases are drawn from an explicit PRNG seed matrix over
+head_dim x (q_seq, kv_seq) x causal/full x f32/bf16 — no hypothesis
+dependency; any failure reproduces from its parametrization id alone.
+The schedule for each case is randomly drawn (loop order + divisor
+blocks over the non-whole indices), so the KV reduction tier is
+exercised at many chunkings, not just the default.
+
+The backward half: each derived spec (``attention.dQ/.dK/.dV``) must be
+a valid codegen input matching its own einsum oracle, and the composed
+custom VJP (``ops.attention``) must pass ``check_grads`` and agree with
+``jax.vjp`` of the pure-jnp forward.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro import codegen, ops  # noqa: E402
+from repro.core.enumerate import (  # noqa: E402
+    ContractionSpec,
+    attention_spec,
+    evaluate_variant,
+)
+from repro.grad import COTANGENT, derived_specs  # noqa: E402
+from repro.search import (  # noqa: E402
+    candidate_schedule,
+    einsum_reference,
+    reference_arrays,
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_caches(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    monkeypatch.setenv("REPRO_PLAN_DB", str(tmp_path / "plans.json"))
+
+
+HEAD_DIMS = (4, 8)
+SEQS = ((8, 8), (8, 16), (16, 8))  # (q_seq, kv_seq): square + both ragged
+MASKS = ("full", "causal")
+TOL = {
+    np.dtype(np.float32): (1e-4, 1e-4),
+    np.dtype(jnp.bfloat16): (6e-2, 6e-2),
+}
+
+CASES = [
+    (d, s, t, mask)
+    for d in HEAD_DIMS
+    for s, t in SEQS
+    for mask in MASKS
+]
+
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def _draw_schedule(spec, rng):
+    """Random legal schedule: shuffled order, divisor blocks, whole
+    indices (d/e) kept at full extent as the search space pins them."""
+    order = list(spec.indices)
+    rng.shuffle(order)
+    whole = set(getattr(spec.root(), "whole_indices", ()))
+    blocks = {
+        i: spec.extents[i]
+        if i in whole
+        else int(rng.choice(_divisors(spec.extents[i])))
+        for i in spec.indices
+    }
+    return candidate_schedule(spec, tuple(order), blocks), order, blocks
+
+
+def _softmax_np(s):
+    m = s.max(axis=-1, keepdims=True)
+    p = np.exp(s - m)
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("d,s,t,mask", CASES)
+def test_attention_kernel_matches_oracles(d, s, t, mask, dtype):
+    causal = mask == "causal"
+    seed = 11000 + d * 97 + s * 13 + t * 7 + causal
+    rng = np.random.default_rng(seed)
+    h = int(rng.choice((1, 2, 3)))
+    spec = attention_spec(h, s, t, d, causal=causal)
+    schedule, order, blocks = _draw_schedule(spec, rng)
+    arrays = reference_arrays(spec, dtype=np.float32, seed=seed)
+    dt = jnp.dtype(dtype)
+
+    # oracle 1: f64 softmax reference over the QUANTIZED inputs, so input
+    # rounding is charged to the oracle, not the kernel
+    q_arrays = {
+        n: np.asarray(jnp.asarray(a, dt), np.float64)
+        for n, a in arrays.items()
+    }
+    ref = einsum_reference(spec, q_arrays)
+
+    kern = codegen.compile(spec, schedule, interpret=True)
+    out = np.asarray(
+        kern(*(jnp.asarray(arrays[n], dt) for n in spec.operands)),
+        np.float64,
+    )
+    rtol, atol = TOL[np.dtype(dt)]
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(
+        out / scale, ref / scale, rtol=rtol, atol=atol,
+        err_msg=f"attention kernel != softmax oracle "
+                f"(h={h} s={s} t={t} d={d} {mask} {dtype} "
+                f"order={order} blocks={blocks})",
+    )
+
+    if dt != jnp.float32:
+        return
+
+    # oracle 2: the reference interpreter, composed as the UNFUSED
+    # program — two core.interp GEMMs around an explicit softmax
+    qk = ContractionSpec(
+        name="qk",
+        operands={"Q": ("h", "s", "d"), "K": ("h", "t", "d")},
+        output=("h", "s", "t"),
+        extents={"h": h, "s": s, "t": t, "d": d},
+    )
+    scores = np.asarray(
+        evaluate_variant(qk, qk.indices, arrays), np.float64
+    ) * d ** -0.5
+    if causal:
+        cols = np.arange(t)[None, None, :]
+        rows = np.arange(s)[None, :, None]
+        scores = np.where(cols <= rows, scores, -np.inf)
+    probs = _softmax_np(scores)
+    pv = ContractionSpec(
+        name="pv",
+        operands={"P": ("h", "s", "t"), "V": ("h", "t", "e")},
+        output=("h", "s", "e"),
+        extents={"h": h, "s": s, "t": t, "e": d},
+    )
+    interp = np.asarray(
+        evaluate_variant(pv, pv.indices, {"P": probs, "V": arrays["V"]}),
+        np.float64,
+    )
+    np.testing.assert_allclose(
+        interp / scale, ref / scale, rtol=rtol, atol=atol,
+        err_msg=f"core.interp leg != softmax oracle (h={h} s={s} t={t} "
+                f"d={d} {mask})",
+    )
+    np.testing.assert_allclose(
+        out / scale, interp / scale, rtol=rtol, atol=atol,
+        err_msg="kernel != core.interp composition",
+    )
+
+
+# ---------------------------------------------------------------------------
+# backward: derived specs as codegen inputs + the composed custom VJP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mask", MASKS)
+def test_attention_derived_specs_compile(mask):
+    """attention.dQ/.dK/.dV are full citizens of the schedule space: each
+    compiles under a random legal schedule and matches its einsum oracle.
+
+    The derived dQ/dK specs consume the score cotangent dS (the chain
+    through softmax is composed by ``grad.attention_vjp``, not by one
+    contraction), so the oracle here is the derived contraction itself.
+    """
+    causal = mask == "causal"
+    seed = 12000 + causal
+    rng = np.random.default_rng(seed)
+    h, s, t, d = 2, 8, 8, 4
+    spec = attention_spec(h, s, t, d, causal=causal)
+    dspecs = derived_specs(spec)
+    assert set(dspecs) == {"Q", "K", "V"}
+    arrays = reference_arrays(spec, dtype=np.float32, seed=seed)
+
+    shapes = {
+        "Q": (h, s, t),  # dS cotangent
+        "K": (h, s, t),
+        "V": (h, s, d),  # output cotangent
+    }
+    for wrt, dspec in dspecs.items():
+        assert dspec.name == f"attention.d{wrt}"
+        darrays = {
+            COTANGENT: rng.standard_normal(shapes[wrt]).astype(np.float32)
+        }
+        if wrt == "V":
+            # dV contracts the softmax probabilities against the cotangent
+            sc = np.einsum(
+                "hsd,htd->hst",
+                arrays["Q"].astype(np.float64),
+                arrays["K"].astype(np.float64),
+            ) * d ** -0.5
+            darrays["P"] = _softmax_np(sc).astype(np.float32)
+        else:
+            other = "K" if wrt == "Q" else "Q"
+            darrays[other] = arrays[other]
+        schedule, order, blocks = _draw_schedule(dspec, rng)
+        kern = codegen.compile(dspec, schedule, interpret=True)
+        out = np.asarray(
+            kern(*(jnp.asarray(darrays[n]) for n in dspec.operands)),
+            np.float64,
+        )
+        ref = einsum_reference(dspec, darrays)
+        np.testing.assert_allclose(
+            out, ref, rtol=1e-4, atol=1e-4,
+            err_msg=f"{dspec.name} kernel != oracle "
+                    f"(order={order} blocks={blocks})",
+        )
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("mask", MASKS)
+def test_ops_attention_forward(mask, dtype):
+    """ops.attention (kernel path, interpret) vs the f64 softmax oracle."""
+    causal = mask == "causal"
+    dt = jnp.dtype(dtype)
+    rng = np.random.default_rng(13000 + causal)
+    h, s, t, d = 4, 16, 16, 8
+    spec = attention_spec(h, s, t, d, causal=causal)
+    arrays = reference_arrays(spec, dtype=np.float32, seed=13100 + causal)
+    q, k, v = (jnp.asarray(arrays[n], dt) for n in ("Q", "K", "V"))
+    ref = einsum_reference(
+        spec, {n: np.asarray(a, np.float64) for n, a in
+               zip(("Q", "K", "V"), (q, k, v))}
+    )
+    out = np.asarray(
+        ops.attention(q, k, v, causal=causal, interpret=True), np.float64
+    )
+    rtol, atol = TOL[np.dtype(dt)]
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(
+        out / scale, ref / scale, rtol=rtol, atol=atol,
+        err_msg=f"ops.attention({mask}, {dtype}) diverged",
+    )
+
+
+@pytest.mark.parametrize("mask", MASKS)
+def test_ops_attention_check_grads(mask):
+    """The composed custom VJP is a true gradient (finite differences)
+    and matches jax.vjp of the pure-jnp forward."""
+    from jax.test_util import check_grads
+
+    causal = mask == "causal"
+    rng = np.random.default_rng(14000 + causal)
+    h, s, d = 2, 8, 4
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((h, s, d)), jnp.float32)
+        for _ in range(3)
+    )
+
+    def f(q_, k_, v_):
+        return ops.attention(q_, k_, v_, causal=causal, interpret=True)
+
+    check_grads(f, (q, k, v), order=1, modes=("rev",), atol=2e-2, rtol=2e-2)
+
+    def ref(q_, k_, v_):
+        sc = jnp.einsum(
+            "hsd,htd->hst", q_, k_, preferred_element_type=jnp.float32
+        ) * d ** -0.5
+        if causal:
+            cols = jax.lax.broadcasted_iota(jnp.int32, (h, s, s), 2)
+            rows = jax.lax.broadcasted_iota(jnp.int32, (h, s, s), 1)
+            sc = jnp.where(cols <= rows, sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum(
+            "hst,hte->hse", p, v_, preferred_element_type=jnp.float32
+        )
+
+    g = jnp.asarray(rng.standard_normal((h, s, d)), jnp.float32)
+    _, vjp_k = jax.vjp(f, q, k, v)
+    _, vjp_r = jax.vjp(ref, q, k, v)
+    for name, a, b in zip(("dQ", "dK", "dV"), vjp_k(g), vjp_r(g)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float64), np.asarray(b, np.float64),
+            rtol=1e-3, atol=1e-3,
+            err_msg=f"attention cotangent {name} ({mask})",
+        )
+
+
+def test_ops_attention_kv_lengths():
+    """Per-head kv_lengths masking == oracle over truncated KV; rows with
+    zero visible keys are exact zeros (the l==0 guard)."""
+    rng = np.random.default_rng(15000)
+    h, s, t, d = 3, 8, 8, 4
+    q, k, v = (
+        jnp.asarray(rng.standard_normal((h, s_ if i == 0 else t, d)),
+                    jnp.float32)
+        for i, s_ in enumerate((s, t, t))
+    )
+    lengths = jnp.asarray([t, 3, 0], jnp.int32)
+    out = np.asarray(
+        ops.attention(q, k, v, kv_lengths=lengths, interpret=True),
+        np.float64,
+    )
+    for hh, n in enumerate(lengths.tolist()):
+        if n == 0:
+            np.testing.assert_array_equal(out[hh], 0.0)
+            continue
+        sc = (
+            np.asarray(q, np.float64)[hh] @ np.asarray(k, np.float64)[hh, :n].T
+        ) * d ** -0.5
+        ref = _softmax_np(sc) @ np.asarray(v, np.float64)[hh, :n]
+        np.testing.assert_allclose(
+            out[hh], ref, rtol=1e-4, atol=1e-4,
+            err_msg=f"kv_lengths head {hh} (len={n})",
+        )
+
+
+def test_capture_dispatches_attention_site():
+    """The dense demo's attention motif harvests and dispatches as one
+    fused site (op == "attention"), not three dense fallbacks."""
+    from repro import capture
+    from repro.models.api import get_api
+
+    cfg = capture.demo_configs()["dense"]
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab, (capture.DEMO_BATCH, capture.DEMO_SEQ)),
+        jnp.int32,
+    )
+    batch = {"tokens": toks, "labels": toks}
+
+    def loss(p, b):
+        return api.loss(p, cfg, b)
+
+    report = capture.optimize(
+        loss, interpret=True, label="dense-attn"
+    ).report_for(params, batch)
+    attn = [s for s in report.sites if s.op == "attention"]
+    assert attn, report.to_json()
+    assert all(s.dispatched for s in attn), report.to_json()

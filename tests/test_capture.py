@@ -112,7 +112,9 @@ def test_capture_dispatch_counts(name):
     ).report_for(params, batch)
     floors = {"dense": 8, "moe": 10, "ssm": 2}
     assert report.dispatched >= floors[name], report.to_json()
-    # attention/SSD einsums with multiple batch dims must fall back today
+    # any remaining fallback (e.g. SSD einsums with multiple batch dims)
+    # must carry a concrete reason — attention/MoE motifs now dispatch as
+    # fused sites instead of falling back
     assert all(
         s.reason for s in report.sites if not s.dispatched
     )
@@ -395,5 +397,48 @@ def test_report_json_roundtrip():
         assert site["status"] in ("dispatched", "fallback")
         if site["status"] == "dispatched":
             assert site["spec"] in (
-                "matmul", "transposed_matmul", "batched_matmul"
+                "matmul", "transposed_matmul", "batched_matmul",
+                "attention", "grouped_matmul",
             )
+
+
+# ---------------------------------------------------------------------------
+# fallback-by-containment blame
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_names_nearest_blocking_ancestor(monkeypatch):
+    """A site under nested non-rewritable primitives must blame the
+    NEAREST one — the primitive that actually stops the rewrite — not the
+    outermost.  Regression: the walk used to latch the first blocker and
+    never replace it.  ``while``/``cond`` are removed from the rewritable
+    set so both act as blockers; the dot lives inside cond inside while,
+    so ``cond`` is the true blocker."""
+    from repro.capture import harvest as hmod
+
+    monkeypatch.setattr(
+        hmod, "REWRITABLE_HOPS",
+        frozenset({"pjit", "closed_call", "core_call"}),
+    )
+    w = _aligned(6, 128, 128)
+
+    def fn(x):
+        def body(c):
+            return jax.lax.cond(
+                c.sum() > 0,
+                lambda a: jnp.dot(a, w, preferred_element_type=F32),
+                lambda a: a * 1.0,
+                c,
+            ) * 0.5
+
+        return jax.lax.while_loop(
+            lambda c: c[0, 0] < 1.0, body, x
+        ).sum()
+
+    report = capture.optimize(fn, interpret=True).report_for(w)
+    sites = [s for s in report.sites if s.op == "dense"]
+    assert sites, report.to_json()
+    for s in sites:
+        assert not s.dispatched
+        assert "(cond)" in s.reason, s.reason
+        assert "while" not in s.reason, s.reason

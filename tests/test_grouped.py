@@ -1,0 +1,332 @@
+"""Property + differential suite for the grouped_matmul family (ISSUE 8).
+
+The ragged grouped GEMM is the one family where "close enough" is not
+good enough: the MoE gate routes through ``ops.grouped_dense`` under a
+flag with the promise of *bitwise* parity against the batched-einsum
+path.  The property tests here pin, over random partitions — including
+empty and size-1 groups, the raggedness that kills naive group-offset
+grids —
+
+  * the reference path (the semantic definition XLA also runs for the
+    MoE gate on CPU): **bitwise** equal to the per-group
+    ``lax.dot_general`` loop, and
+  * the generated group-offset Pallas kernel (interpret mode): equal to
+    the same loop up to f32 reduction-order reassociation only (both
+    sides accumulate in f32 and store in the matched dtype, so the
+    tolerance is ~1 ulp of the accumulator, orders of magnitude below
+    any masking/offset bug).
+
+Property tests run under the seeded fallback engine when hypothesis is
+absent (tier-1 never installs packages); failures reproduce from the
+printed falsifying example.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+from jax import lax  # noqa: E402
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import codegen, ops  # noqa: E402
+from repro.core.enumerate import grouped_matmul_spec  # noqa: E402
+from repro.grad import COTANGENT, derived_specs  # noqa: E402
+from repro.search import (  # noqa: E402
+    candidate_schedule,
+    einsum_reference,
+    reference_arrays,
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_caches(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    monkeypatch.setenv("REPRO_PLAN_DB", str(tmp_path / "plans.json"))
+
+
+def _partition(rng, g, n):
+    """Random composition of n into g parts, empties allowed (and with a
+    forced empty + size-1 group when room permits, so the degenerate
+    cases are always in-distribution)."""
+    cuts = np.sort(rng.integers(0, n + 1, g - 1)) if g > 1 else np.array([], int)
+    sizes = np.diff(np.concatenate([[0], cuts, [n]])).astype(int)
+    if g >= 3 and n >= 1:
+        sizes[rng.integers(0, g)] = 0
+        sizes[-1] = n - sizes[:-1].sum()
+        if sizes[-1] < 0:  # rebalance if the forced empty overdrew
+            sizes = np.maximum(sizes, 0)
+            sizes[-1] = n - sizes[:-1].sum()
+    assert sizes.sum() == n and (sizes >= 0).all()
+    return tuple(int(s) for s in sizes)
+
+
+def _loop_oracle(x, w, sizes, out_dtype):
+    """Per-group dot_general loop — the bitwise reference: same f32
+    accumulation and store rounding as the generated kernel."""
+    parts, o = [], 0
+    for g, s in enumerate(sizes):
+        parts.append(
+            lax.dot_general(
+                x[o : o + s], w[g], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).astype(out_dtype)
+        )
+        o += s
+    return jnp.concatenate(parts, axis=0) if parts else jnp.zeros(
+        (0, w.shape[-1]), out_dtype
+    )
+
+
+@given(
+    seed=st.integers(0, 10**6),
+    g=st.integers(1, 5),
+    n=st.integers(0, 24),
+    k=st.sampled_from([1, 3, 4, 8]),
+    f=st.sampled_from([1, 2, 4, 8]),
+)
+@settings(max_examples=30, deadline=None)
+def test_grouped_matches_loop_both_paths(seed, g, n, k, f):
+    """ops.grouped_dense == per-group loop: bitwise on the reference
+    path, reduction-order-tight on the generated-kernel path."""
+    if n == 0:
+        return  # empty-input path covered by its own test below
+    rng = np.random.default_rng(seed)
+    sizes = _partition(rng, g, n)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((g, k, f)), jnp.float32)
+    ref = _loop_oracle(x, w, sizes, jnp.float32)
+
+    ref_path = ops.grouped_dense(x, w, sizes)  # CPU: semantic definition
+    assert ref_path.dtype == ref.dtype
+    np.testing.assert_array_equal(
+        np.asarray(ref_path), np.asarray(ref),
+        err_msg=f"reference path not bitwise (sizes={sizes} k={k} f={f})",
+    )
+
+    out = ops.grouped_dense(x, w, sizes, interpret=True)
+    assert out.dtype == ref.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float64), np.asarray(ref, np.float64),
+        rtol=1e-5, atol=1e-6,
+        err_msg=f"grouped kernel diverged (sizes={sizes} k={k} f={f})",
+    )
+
+
+@given(seed=st.integers(0, 10**6), g=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_grouped_bf16_store_matches_loop(seed, g):
+    """bf16 operands: f32 accumulation, bf16 store.  The bf16 rounding at
+    the store dominates reassociation noise, so both paths must land on
+    values within one bf16 ulp of the loop's."""
+    rng = np.random.default_rng(seed)
+    n, k, f = 12, 4, 4
+    sizes = _partition(rng, g, n)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((g, k, f)), jnp.bfloat16)
+    ref = _loop_oracle(x, w, sizes, jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(ops.grouped_dense(x, w, sizes), np.float32),
+        np.asarray(ref, np.float32),
+    )
+    out = ops.grouped_dense(x, w, sizes, interpret=True)
+    assert out.dtype == ref.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=1e-2, atol=1e-2,
+    )
+
+
+def test_grouped_empty_and_singleton_groups():
+    """Hand-pinned degenerate partitions: leading/trailing empties,
+    all-size-1, and the all-rows-in-one-group extremes."""
+    rng = np.random.default_rng(42)
+    k, f = 4, 8
+    for sizes in [
+        (0, 5, 0), (5, 0, 0), (0, 0, 5),
+        (1, 1, 1, 1, 1), (5,), (0, 0, 0, 5, 0),
+    ]:
+        n = sum(sizes)
+        x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+        w = jnp.asarray(
+            rng.standard_normal((len(sizes), k, f)), jnp.float32
+        )
+        ref = _loop_oracle(x, w, sizes, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ops.grouped_dense(x, w, sizes)), np.asarray(ref),
+            err_msg=f"sizes={sizes} (reference path)",
+        )
+        out = ops.grouped_dense(x, w, sizes, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float64), np.asarray(ref, np.float64),
+            rtol=1e-5, atol=1e-6, err_msg=f"sizes={sizes} (kernel path)",
+        )
+
+
+def test_grouped_zero_rows_total():
+    x = jnp.zeros((0, 4), jnp.float32)
+    w = jnp.asarray(
+        np.random.default_rng(0).standard_normal((3, 4, 8)), jnp.float32
+    )
+    out = ops.grouped_dense(x, w, (0, 0, 0), interpret=True)
+    assert out.shape == (0, 8)
+
+
+def test_grouped_validation():
+    x = jnp.zeros((4, 3), jnp.float32)
+    w = jnp.zeros((2, 3, 5), jnp.float32)
+    with pytest.raises(ValueError):
+        ops.grouped_dense(x, w, (2, 1), interpret=True)  # sum != rows
+    with pytest.raises(ValueError):
+        ops.grouped_dense(x, w, (2, 1, 1), interpret=True)  # len != g
+    with pytest.raises(ValueError):
+        ops.grouped_dense(x[0], w, (2, 2), interpret=True)  # x not 2-D
+
+
+# ---------------------------------------------------------------------------
+# the family as a search-space citizen: random schedules + derived specs
+# ---------------------------------------------------------------------------
+
+
+def _divisors(n: int):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def _draw_schedule(spec, rng):
+    order = list(spec.indices)
+    rng.shuffle(order)
+    whole = set(getattr(spec.root(), "whole_indices", ()))
+    blocks = {
+        i: spec.extents[i]
+        if i in whole or spec.extents[i] == 0
+        else int(rng.choice(_divisors(spec.extents[i])))
+        for i in spec.indices
+    }
+    return candidate_schedule(spec, tuple(order), blocks)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_grouped_derived_specs_compile(seed):
+    """grouped_matmul.dX/.dW compile under random legal schedules and
+    match the per-group f64 oracle AND jax.vjp of the loop forward."""
+    rng = np.random.default_rng(16000 + seed)
+    g, k, f = 3, 4, 4
+    sizes = _partition(rng, g, 10)
+    spec = grouped_matmul_spec(sizes, k, f)
+    n = sum(sizes)
+    arrays = reference_arrays(spec, dtype=np.float32, seed=seed)
+    gcot = rng.standard_normal((n, f)).astype(np.float32)
+
+    dspecs = derived_specs(spec)
+    assert set(dspecs) == {"X", "W"}
+
+    x, w = jnp.asarray(arrays["X"]), jnp.asarray(arrays["W"])
+    _, vjp = jax.vjp(
+        lambda x_, w_: _loop_oracle(x_, w_, sizes, jnp.float32), x, w
+    )
+    oracle = dict(zip(("X", "W"), vjp(jnp.asarray(gcot))))
+
+    for wrt, dspec in dspecs.items():
+        assert dspec.name == f"grouped_matmul.d{wrt}"
+        assert dspec.group_sizes == sizes
+        darrays = {COTANGENT: gcot}
+        darrays.update({m: arrays[m] for m in spec.operands if m != wrt})
+        kern = codegen.compile(
+            dspec, _draw_schedule(dspec, rng), interpret=True
+        )
+        out = np.asarray(
+            kern(*(jnp.asarray(darrays[m]) for m in dspec.operands)),
+            np.float64,
+        )
+        np.testing.assert_allclose(
+            out, einsum_reference(dspec, darrays), rtol=1e-4, atol=1e-4,
+            err_msg=f"{dspec.name} != per-group oracle (sizes={sizes})",
+        )
+        np.testing.assert_allclose(
+            out, np.asarray(oracle[wrt], np.float64),
+            rtol=1e-3, atol=1e-3,
+            err_msg=f"{dspec.name} is not the cotangent (sizes={sizes})",
+        )
+
+
+def test_ops_grouped_dense_check_grads():
+    from jax.test_util import check_grads
+
+    rng = np.random.default_rng(17000)
+    sizes = (3, 0, 4, 1)
+    x = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 4, 4)), jnp.float32)
+
+    def fn(x_, w_):
+        return ops.grouped_dense(x_, w_, sizes, interpret=True)
+
+    check_grads(fn, (x, w), order=1, modes=("rev",), atol=2e-2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# capture: the MoE demo dispatches grouped sites without losing the floor
+# ---------------------------------------------------------------------------
+
+
+def test_moe_capture_dispatches_grouped_sites():
+    """capture.optimize on the MoE demo config (grouped gate on) emits
+    >= 1 grouped_dense site, keeps the dense dispatch floor, and the
+    captured loss matches the uncaptured one."""
+    from repro import capture
+    from repro.models.api import get_api
+
+    cfg = capture.demo_configs()["moe"]
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.key(0))
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab, (capture.DEMO_BATCH, capture.DEMO_SEQ)),
+        jnp.int32,
+    )
+    batch = {"tokens": toks, "labels": toks}
+
+    def loss(p, b):
+        return api.loss(p, cfg, b)
+
+    cf = capture.optimize(loss, interpret=True, label="moe-grouped")
+    report = cf.report_for(params, batch)
+    grouped = [s for s in report.sites if s.op == "grouped_dense"]
+    assert grouped, report.to_json()
+    assert all(s.dispatched for s in grouped), report.to_json()
+    # the grouped sites ride ON TOP of the dense floor, not instead of it
+    assert report.dispatched >= 10, report.to_json()
+
+    ref = loss(params, batch)
+    out = cf(params, batch)
+    np.testing.assert_allclose(float(out), float(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_moe_grouped_gate_bitwise(monkeypatch):
+    """REPRO_MOE_GROUPED=1 routes expert FFNs through grouped_dense with
+    bitwise loss AND gradient parity against the einsum path (uniform
+    (C,)*E groups, so the ragged kernel must reduce to the batched one)."""
+    from repro import capture
+    from repro.models.api import get_api
+
+    cfg = capture.demo_configs()["moe"]
+    api = get_api(cfg)
+    params, _ = api.init(cfg, jax.random.key(1))
+    rng = np.random.default_rng(11)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab, (capture.DEMO_BATCH, capture.DEMO_SEQ)),
+        jnp.int32,
+    )
+    batch = {"tokens": toks, "labels": toks}
+
+    monkeypatch.delenv("REPRO_MOE_GROUPED", raising=False)
+    ref = float(api.loss(params, cfg, batch))
+    g_ref = jax.grad(lambda p: api.loss(p, cfg, batch))(params)
+    monkeypatch.setenv("REPRO_MOE_GROUPED", "1")
+    got = float(api.loss(params, cfg, batch))
+    g_got = jax.grad(lambda p: api.loss(p, cfg, batch))(params)
+    assert got == ref, f"grouped gate drifted: {got} != {ref}"
+    for a, b in zip(jax.tree.leaves(g_got), jax.tree.leaves(g_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

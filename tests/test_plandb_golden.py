@@ -28,23 +28,39 @@ field; v3 = observability (this file's pin) — entries self-describe with
 renders); every v1/v2 key went cold deliberately (see the migration note
 in ``search/plandb.py``).
 
+ISSUE 8 extends the committed surface to the fused families: the
+``attention@HxSxTxDxE`` key (plus its derived ``attention.dQ/.dK/.dV``)
+and the ``grouped_matmul@GxKxF+sizes`` key (plus ``.dX/.dW``, GroupedSpecs
+themselves).  Their signatures fold ``fused_meta()`` (causal flag, group
+sizes) into the digest, so a causal attention plan can never be served to
+a full-attention call site — pinned below without fixture entries.
+
 Regenerate only after a deliberate format bump (``PLAN_VERSION``):
 
     import numpy as np
     import repro.codegen.cache as cache_mod
     cache_mod.hardware_fingerprint = lambda: "golden/fixture-hw"
-    from repro.core.enumerate import matmul_spec
+    from repro.core.enumerate import (
+        attention_spec, matmul_spec, uniform_grouped_spec,
+    )
     from repro.grad import derived_specs
     from repro.search import PlanDB, search_schedule
     db = PlanDB("tests/data/plan_db_golden.json")
     fwd = matmul_spec(512, 512, 512); d = derived_specs(fwd)
+    attn = attention_spec(4, 64, 64, 8); da = derived_specs(attn)
+    grp = uniform_grouped_spec(4, 16, 32, 32); dg = derived_specs(grp)
+    f32 = np.dtype(np.float32)
     for spec, dt, mesh in [
-        (fwd, np.dtype(np.float32), None),
+        (fwd, f32, None),
         (fwd, np.dtype("bfloat16"), None),
-        (d["A"], np.dtype(np.float32), None),
-        (d["B"], np.dtype(np.float32), None),
-        (fwd, np.dtype(np.float32), (2, 4)),
-        (d["A"], np.dtype(np.float32), (2, 4)),
+        (d["A"], f32, None),
+        (d["B"], f32, None),
+        (fwd, f32, (2, 4)),
+        (d["A"], f32, (2, 4)),
+        (attn, f32, None),
+        (da["Q"], f32, None), (da["K"], f32, None), (da["V"], f32, None),
+        (grp, f32, None),
+        (dg["X"], f32, None), (dg["W"], f32, None),
     ]:
         search_schedule(spec, dtype=dt, beam_width=4, topk=3,
                         measure=False, plan_db=db, use_cached_plan=False,
@@ -62,7 +78,11 @@ import pytest
 
 import repro.codegen.cache as cache_mod
 from repro.codegen.cache import schedule_from_dict, schedule_to_dict
-from repro.core.enumerate import matmul_spec
+from repro.core.enumerate import (
+    attention_spec,
+    matmul_spec,
+    uniform_grouped_spec,
+)
 from repro.core.schedule import MESH_TIERS
 from repro.grad import derived_specs
 from repro.search import PlanDB
@@ -75,15 +95,28 @@ GOLDEN_HW = "golden/fixture-hw"
 
 _FWD = matmul_spec(512, 512, 512)
 _D = derived_specs(_FWD)
+_ATTN = attention_spec(4, 64, 64, 8)
+_DA = derived_specs(_ATTN)
+_GRP = uniform_grouped_spec(4, 16, 32, 32)
+_DG = derived_specs(_GRP)
+_F32 = np.dtype(np.float32)
 
 #: (label, spec, dtype, mesh descriptor)
 FIXTURE_POINTS = [
-    ("matmul-f32", _FWD, np.dtype(np.float32), None),
+    ("matmul-f32", _FWD, _F32, None),
     ("matmul-bf16", _FWD, np.dtype("bfloat16"), None),
-    ("matmul.dA", _D["A"], np.dtype(np.float32), None),
-    ("matmul.dB", _D["B"], np.dtype(np.float32), None),
-    ("matmul@mesh=2x4", _FWD, np.dtype(np.float32), "2x4"),
-    ("matmul.dA@mesh=2x4", _D["A"], np.dtype(np.float32), "2x4"),
+    ("matmul.dA", _D["A"], _F32, None),
+    ("matmul.dB", _D["B"], _F32, None),
+    ("matmul@mesh=2x4", _FWD, _F32, "2x4"),
+    ("matmul.dA@mesh=2x4", _D["A"], _F32, "2x4"),
+    # ISSUE 8: the fused families and their full backward key fans
+    ("attention", _ATTN, _F32, None),
+    ("attention.dQ", _DA["Q"], _F32, None),
+    ("attention.dK", _DA["K"], _F32, None),
+    ("attention.dV", _DA["V"], _F32, None),
+    ("grouped_matmul", _GRP, _F32, None),
+    ("grouped_matmul.dX", _DG["X"], _F32, None),
+    ("grouped_matmul.dW", _DG["W"], _F32, None),
 ]
 
 
@@ -158,6 +191,42 @@ def test_grad_plan_keys_match_derived_fixture_keys(fixture_data):
     fwd_mesh = plan_key(_FWD, np.float32, hardware=GOLDEN_HW, mesh="2x4")
     assert fwd != fwd_mesh
     assert fwd not in keys.values() and fwd_mesh not in mesh_keys.values()
+
+
+def test_fused_grad_plan_keys_match_fixture(fixture_data):
+    """The fused families' backward lookups address the committed derived
+    entries: attention fans to dQ/dK/dV, grouped to dX/dW."""
+    akeys = grad_plan_keys(_ATTN, np.float32, hardware=GOLDEN_HW)
+    assert set(akeys) == {"Q", "K", "V"}
+    gkeys = grad_plan_keys(_GRP, np.float32, hardware=GOLDEN_HW)
+    assert set(gkeys) == {"X", "W"}
+    for wrt, key in {**akeys, **gkeys}.items():
+        assert key in fixture_data, f"fused derived key d{wrt} drifted"
+    fused_fwd = {
+        plan_key(_ATTN, np.float32, hardware=GOLDEN_HW),
+        plan_key(_GRP, np.float32, hardware=GOLDEN_HW),
+    }
+    assert fused_fwd.isdisjoint({*akeys.values(), *gkeys.values()})
+
+
+def test_fused_meta_is_part_of_the_key():
+    """causal and group_sizes live in fused_meta -> the digest: a causal
+    plan must never be served to a full-attention site, nor a plan tuned
+    for one partition to a differently-ragged one."""
+    full = plan_key(_ATTN, np.float32, hardware=GOLDEN_HW)
+    causal = plan_key(
+        attention_spec(4, 64, 64, 8, causal=True), np.float32,
+        hardware=GOLDEN_HW,
+    )
+    assert full != causal
+    ragged = uniform_grouped_spec(4, 16, 32, 32)
+    from repro.core.enumerate import grouped_matmul_spec
+
+    other = grouped_matmul_spec((0, 32, 16, 16), 32, 32)  # same extents
+    assert other.extents == ragged.extents
+    assert plan_key(ragged, np.float32, hardware=GOLDEN_HW) != plan_key(
+        other, np.float32, hardware=GOLDEN_HW
+    )
 
 
 @pytest.mark.parametrize(

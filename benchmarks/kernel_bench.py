@@ -678,10 +678,99 @@ def _bench_moe_grouped(smoke: bool):
     )
 
 
+@guarded("quant.gemm")
+def _bench_quant(smoke: bool):
+    """Searched int8/fp8 quant tier vs the bf16 baseline at matched shapes.
+
+    Wall-clock here is interpret-mode correctness only (header note) — a
+    CPU interpreter cannot see the bandwidth win of 1-byte operands — so
+    the rows' reported seconds are the analytic one-pass HBM floor
+    (``roofline.analysis.quant_hbm_bytes`` / TPU hbm_bw), exactly like
+    the ``kernel.matmul.b*`` rows.  With the same ``flops=`` on every
+    row, ``BENCH_quant.json`` then reports analytic GFLOP/s, and the
+    ISSUE-10 gate "quant GFLOP/s >= bf16 at matched shapes" is the
+    ``not_slower`` byte claim: quantized operands stream at 1 B/elem vs
+    bf16's 2, and the 4-byte accumulator output cannot eat the saving at
+    these shapes.  Correctness is NOT analytic: each quant row runs the
+    searched ladder (``search_schedule`` over the quantized spec,
+    measure=True) and reports the kernel-vs-dequantized-f64-oracle
+    ``max_err`` — exact for int8 (integer products, exact accumulation),
+    f32-accumulation-bounded for fp8.  ``quant.dense`` adds the
+    end-to-end ``ops.dense(..., quant=)`` path, where dynamic input
+    quantization error is charged to the data, hence a relative (not
+    max_err) gate.
+    """
+    from repro import ops
+    from repro.core.enumerate import QUANT_FORMATS, quantize_spec
+    from repro.roofline.analysis import quant_hbm_bytes
+    from repro.search import reference_arrays, search_schedule
+
+    s_ = 2 if smoke else 1
+    # reduction-dominant shape: operand traffic (saved by 1-byte storage)
+    # must dominate the 4-byte accumulator output, else the byte floors
+    # tie exactly — on a cube, 2N²·1 + N²·4 == 2N²·2 + N²·2.  k >> m, n
+    # is also the regime the tier serves (weight GEMMs).
+    m = n = 128 // s_
+    k = 2048 // s_
+    base = matmul_spec(m, k, n)
+    flops = base.flops()
+    # matched-shape bf16 baseline: same one-pass floor at 2 B/elem
+    bf16_bytes = quant_hbm_bytes(base, elem_bytes=2)
+    bf16_hbm_s = bf16_bytes / TPU["hbm_bw"]
+    emit(
+        "quant.bf16", bf16_hbm_s,
+        f"ok=True;hbm_bytes={bf16_bytes:.0f};flops={flops}",
+    )
+
+    for fmt in ("int8", "fp8"):
+        spec = quantize_spec(base, fmt=fmt)
+        dt = np.dtype(QUANT_FORMATS[fmt].dtype)
+        arrays = reference_arrays(spec, dtype=dt, seed=50)
+        res = search_schedule(
+            spec, dtype=dt, beam_width=4, topk=2, interpret=True,
+            measure=True, arrays=arrays, plan_db=None,
+        )
+        win = res.best
+        if win.measured_s is None or win.max_err is None:
+            raise RuntimeError(f"quant {fmt} winner was not measured")
+        qbytes = quant_hbm_bytes(spec)
+        hbm_s = qbytes / TPU["hbm_bw"]
+        emit(
+            f"quant.{fmt}", hbm_s,
+            f"ok=True;not_slower={hbm_s <= bf16_hbm_s};"
+            f"max_err={win.max_err:.2e};hbm_bytes={qbytes:.0f};"
+            f"bf16_hbm_s={bf16_hbm_s:.3g};"
+            f"interpret_s={win.measured_s:.3g};flops={flops}",
+        )
+
+    # end-to-end: ops.dense with dynamic input quantization (the capture /
+    # serving entry point).  128-aligned so the kernel dispatch fires.
+    me = ke = ne = 128
+    x, w = _rnd(me, ke, seed=52), _rnd(ke, ne, seed=53)
+    ref = np.asarray(ops.dense(x, w, interpret=True), np.float64)
+    t_q = timeit(
+        lambda: np.asarray(ops.dense(x, w, interpret=True, quant="int8")),
+        repeats=1,
+    )
+    out = np.asarray(
+        ops.dense(x, w, interpret=True, quant="int8"), np.float64
+    )
+    rel = np.abs(out - ref).max() / max(np.abs(ref).max(), 1e-30)
+    emit(
+        "quant.dense", t_q,
+        f"ok={rel < 0.05};rel_err={rel:.2e};flops={2 * me * ke * ne}",
+    )
+
+
 def run_attn(smoke: bool = False):
     """The --attn sections alone (the attn-smoke CI job's bench half)."""
     _bench_attn_fused(smoke)
     _bench_moe_grouped(smoke)
+
+
+def run_quant(smoke: bool = False):
+    """The --quant sections alone (the quant-smoke CI job's bench half)."""
+    _bench_quant(smoke)
 
 
 def run(smoke: bool = False):
@@ -739,9 +828,14 @@ if __name__ == "__main__":
     ap.add_argument("--attn", action="store_true",
                     help="run only the fused attention + grouped-GEMM "
                          "sections (the attn-smoke CI job)")
+    ap.add_argument("--quant", action="store_true",
+                    help="run only the int8/fp8 quant-tier sections "
+                         "(the quant-smoke CI job)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.attn:
         run_attn(smoke=args.smoke)
+    elif args.quant:
+        run_quant(smoke=args.smoke)
     else:
         run(smoke=args.smoke)

@@ -33,6 +33,16 @@ round-trips the score tensor) and ``moe.grouped`` must report
 ``ok=True`` (the ragged kernel matches the per-group dot loop).  Rows
 land in ``BENCH_attn.json`` — the attn-smoke CI job's artifact.
 
+With ``--quant`` the bench subprocess runs only the int8/fp8 quant-tier
+sections (``kernel_bench --smoke --quant``) and the ``quant.*`` rows
+become required: every quant row must report ``ok=True`` (bounded
+kernel-vs-dequantized-oracle error through the searched ladder), and
+``quant.int8`` / ``quant.fp8`` must additionally report
+``not_slower=True`` — the analytic one-pass HBM floor of the quantized
+contraction is below the bf16 floor at the matched shape, which with
+matched ``flops=`` is exactly the "quant GFLOP/s >= bf16" gate in
+``BENCH_quant.json`` — the quant-smoke CI job's artifact.
+
 With ``--mesh`` the bench subprocess runs under a forced 8-device CPU mesh
 (``--xla_force_host_platform_device_count=8``) and the ``mesh.*`` rows
 become required: ``mesh.search`` and ``mesh.ring`` must report ``ok=True``
@@ -43,7 +53,7 @@ measured set).  This is the mesh-smoke CI job's entry point; the parsed
 rows then land in ``BENCH_mesh.json`` instead of the single-device
 baseline file.
 
-Usage: python scripts/bench_smoke.py [--mesh | --serve | --attn]
+Usage: python scripts/bench_smoke.py [--mesh | --serve | --attn | --quant]
 """
 
 from __future__ import annotations
@@ -64,6 +74,7 @@ BENCH_MESH_JSON = "BENCH_mesh.json"
 BENCH_OBS_JSON = "BENCH_obs.json"
 BENCH_SERVE_JSON = "BENCH_serve.json"
 BENCH_ATTN_JSON = "BENCH_attn.json"
+BENCH_QUANT_JSON = "BENCH_quant.json"
 REQUIRED = [
     "kernel.gen.matmul",
     "kernel.gen.vs_handwritten",
@@ -106,6 +117,16 @@ REQUIRED_ATTN = [
     "attn.fused",
     "moe.grouped",
 ]
+#: the --quant run gates the int8/fp8 tier (ISSUE 10): the searched
+#: quantized kernels' bounded error vs the dequantized f64 oracle, and
+#: the analytic HBM claim that 1-byte operands beat bf16 at the matched
+#: shape (== the "quant GFLOP/s >= bf16" gate under matched flops)
+REQUIRED_QUANT = [
+    "quant.bf16",
+    "quant.int8",
+    "quant.fp8",
+    "quant.dense",
+]
 
 
 def check_row(name: str, derived: str) -> str:
@@ -139,6 +160,11 @@ def check_row(name: str, derived: str) -> str:
                 "unfused two-GEMM+softmax program")
     if name == "moe.grouped" and "ok=True" not in derived:
         return "grouped kernel diverged from the per-group dot loop"
+    if name.startswith("quant.") and "ok=True" not in derived:
+        return "quant row unhealthy (ok=True missing)"
+    if name in ("quant.int8", "quant.fp8") and "not_slower=True" not in derived:
+        return ("quantized tier claims no HBM advantage over bf16 at "
+                "the matched shape")
     if name.startswith("capture.sites."):
         m = re.search(r"dispatched=(\d+)", derived)
         if not m:
@@ -261,9 +287,17 @@ def main() -> int:
         help="run only kernel_bench's fused attention + grouped-GEMM "
              "sections and gate on the attn.fused / moe.grouped rows",
     )
+    ap.add_argument(
+        "--quant", action="store_true",
+        help="run only kernel_bench's int8/fp8 quant-tier sections and "
+             "gate on the quant.* rows (searched ladder error bounds + "
+             "analytic HBM advantage over bf16)",
+    )
     args = ap.parse_args()
-    if sum((args.mesh, args.serve, args.attn)) > 1:
-        ap.error("--mesh/--serve/--attn are separate CI jobs; pick one")
+    if sum((args.mesh, args.serve, args.attn, args.quant)) > 1:
+        ap.error(
+            "--mesh/--serve/--attn/--quant are separate CI jobs; pick one"
+        )
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -278,6 +312,10 @@ def main() -> int:
         required = list(REQUIRED_ATTN)
         bench_json = BENCH_ATTN_JSON
         bench_flags.append("--attn")
+    if args.quant:
+        required = list(REQUIRED_QUANT)
+        bench_json = BENCH_QUANT_JSON
+        bench_flags.append("--quant")
     if args.mesh:
         flags = env.get("XLA_FLAGS", "")
         env["XLA_FLAGS"] = (

@@ -72,16 +72,18 @@ def _interpret_default() -> bool:
 
 class _Ctx:
     __slots__ = (
-        "interpret", "dispatch", "site_memo", "contains_memo",
+        "interpret", "dispatch", "quant", "site_memo", "contains_memo",
         "analysis_memo",
     )
 
     def __init__(self, interpret: bool, dispatch: bool = True,
+                 quant: Optional[str] = None,
                  site_memo: Optional[dict] = None,
                  contains_memo: Optional[dict] = None,
                  analysis_memo: Optional[dict] = None):
         self.interpret = interpret
         self.dispatch = dispatch
+        self.quant = quant
         # id(eqn) -> CaptureSite, id(jaxpr) -> bool / JaxprAnalysis; keyed
         # by identity, which is stable for the lifetime of the traced
         # _Entry that owns both the jaxpr and these memos
@@ -152,14 +154,21 @@ def _bind(eqn, invals):
     return list(out) if eqn.primitive.multiple_results else [out]
 
 
-def _apply_site(site, lhs, rhs, interpret: bool):
-    """Evaluate a dispatched site through its ``repro.ops`` entry point."""
+def _apply_site(site, lhs, rhs, interpret: bool, quant: Optional[str] = None):
+    """Evaluate a dispatched site through its ``repro.ops`` entry point.
+
+    ``quant`` threads the capture-level quantization policy into the
+    ``dense`` entry point only — projections are the weight-heavy sites
+    the int8/fp8 tier targets; the other entry points stay full-precision
+    (the quant tier is inference-oriented and has no custom VJP).
+    """
     from .. import ops
 
     if site.op == "dense":
         x = lhs.reshape(-1, lhs.shape[-1]) if lhs.ndim > 2 else lhs
         out = ops.dense(
-            x, rhs, out_dtype=site.out_dtype, interpret=interpret
+            x, rhs, out_dtype=site.out_dtype, interpret=interpret,
+            quant=quant,
         )
         return out.reshape(site.out_shape)
     if site.op == "dense_transposed":
@@ -230,7 +239,9 @@ def _eval_jaxpr(
                 eqn, grouped_lhs=id(eqn) in analysis.grouped
             )
             if ctx.dispatch and site.dispatched:
-                outs = [_apply_site(site, invals[0], invals[1], ctx.interpret)]
+                outs = [_apply_site(
+                    site, invals[0], invals[1], ctx.interpret, ctx.quant
+                )]
             else:
                 outs = _bind(eqn, invals)
 
@@ -342,12 +353,14 @@ class CapturedFunction:
         interpret: Optional[bool] = None,
         dispatch: bool = True,
         label: str = "",
+        quant: Optional[str] = None,
     ):
         self._fn = fn
         self._interpret = (
             _interpret_default() if interpret is None else bool(interpret)
         )
         self._dispatch = dispatch
+        self._quant = quant
         self._label = label or getattr(fn, "__name__", "captured")
         self._entries: Dict[Tuple, _Entry] = {}
 
@@ -406,7 +419,7 @@ class CapturedFunction:
         entry, flat, _ = self._entry_for(args, kwargs)
         outs = _eval_jaxpr(
             entry.closed, flat,
-            _Ctx(self._interpret, self._dispatch,
+            _Ctx(self._interpret, self._dispatch, quant=self._quant,
                  site_memo=entry.site_memo,
                  contains_memo=entry.contains_memo),
         )
@@ -438,6 +451,7 @@ def optimize(
     interpret: Optional[bool] = None,
     dispatch: bool = True,
     label: str = "",
+    quant: Optional[str] = None,
 ) -> CapturedFunction:
     """Capture ``fn`` and dispatch its eligible GEMMs through ``repro.ops``.
 
@@ -447,9 +461,13 @@ def optimize(
     ``dispatch=False`` degrades to a pure harvest: the function replays
     byte-identically (every equation re-bound as traced) but the report
     still says what *would* dispatch.
+    ``quant`` ('int8' | 'fp8') routes dispatched ``dense`` sites through
+    the dynamic-quantized tier (``ops.dense(..., quant=...)``) — an
+    inference-only policy: the quant path has no custom VJP, so don't
+    ``jax.grad`` a quantized capture.
     """
     return CapturedFunction(
-        fn, interpret=interpret, dispatch=dispatch, label=label
+        fn, interpret=interpret, dispatch=dispatch, label=label, quant=quant
     )
 
 

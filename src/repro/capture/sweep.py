@@ -120,6 +120,7 @@ def sweep_captured(
     repeats: int = 1,
     verbose: bool = False,
     mesh_shape=None,
+    quant=None,
 ) -> int:
     """Search + persist ranked plans for every harvested GEMM point.
 
@@ -131,38 +132,61 @@ def sweep_captured(
     keys — the whole-model analogue of ``scripts/search_sweep.py --mesh``:
     a captured model then serves/trains through sharded generated kernels
     whenever a matching mesh is active (``ops._mesh_plan_kernel``).
+    With ``quant`` ('int8' | 'fp8') every *forward* sweep point also gets
+    a quantized leg — the spec re-searched at the low-precision tier under
+    its dtype-qualified plan key — so a quantized capture/serve run finds
+    its ranked plans warm.  Quant legs run at mesh=None only (the quant
+    tier, like the fused families, has no mesh lowering yet) and skip
+    fused/derived specs that refuse quantization.
     Returns the number of (spec, dtype, mesh) sweep points persisted.
     """
+    from ..core.enumerate import QUANT_FORMATS, quantize_spec
     from ..search import default_plan_db, search_schedule, sweep_specs
 
     db = plan_db if plan_db is not None else default_plan_db()
+    if quant is not None and quant not in QUANT_FORMATS:
+        raise ValueError(
+            f"quant must be one of {sorted(QUANT_FORMATS)}, got {quant!r}"
+        )
     n = 0
     meshes = [None] + ([mesh_shape] if mesh_shape is not None else [])
     for label, spec, dtype in points:
         for sub_label, sub in sweep_specs(spec, with_grads=with_grads):
-            for ms in meshes:
-                res = search_schedule(
-                    sub,
-                    dtype=np.dtype(dtype),
-                    beam_width=beam_width,
-                    topk=topk,
-                    interpret=interpret,
-                    measure=measure,
-                    repeats=repeats,
-                    plan_db=db,
-                    mesh_shape=ms,
-                )
-                n += 1
-                if verbose:
-                    from ..obs import log
+            legs = [(sub_label, sub, np.dtype(dtype), meshes)]
+            if quant is not None and sub_label == "fwd":
+                try:
+                    qspec = quantize_spec(sub, fmt=quant)
+                    qdt = np.dtype(QUANT_FORMATS[quant].dtype)
+                except (NotImplementedError, ValueError, TypeError):
+                    qspec = None  # fused family / unregistered fp8 dtype
+                if qspec is not None:
+                    legs.append(
+                        (f"{sub_label}@{quant}", qspec, qdt, [None])
+                    )
+            for leg_label, leg_spec, leg_dt, leg_meshes in legs:
+                for ms in leg_meshes:
+                    res = search_schedule(
+                        leg_spec,
+                        dtype=leg_dt,
+                        beam_width=beam_width,
+                        topk=topk,
+                        interpret=interpret,
+                        measure=measure,
+                        repeats=repeats,
+                        plan_db=db,
+                        mesh_shape=ms,
+                    )
+                    n += 1
+                    if verbose:
+                        from ..obs import log
 
-                    best = res.best
-                    t = ("-" if best.measured_s is None
-                         else f"{best.measured_s * 1e3:.2f}ms")
-                    at = f"@mesh={res.mesh}" if res.mesh else ""
-                    log.info("capture-sweep",
-                             f"{label}/{sub_label}{at} "
-                             f"dtype={dtype} best={t} (db={db.path})")
+                        best = res.best
+                        t = ("-" if best.measured_s is None
+                             else f"{best.measured_s * 1e3:.2f}ms")
+                        at = f"@mesh={res.mesh}" if res.mesh else ""
+                        log.info("capture-sweep",
+                                 f"{label}/{leg_label}{at} "
+                                 f"dtype={leg_dt} best={t} (db={db.path})")
     return n
 
 

@@ -67,6 +67,12 @@ def spec_signature(spec: ContractionSpec) -> Dict[str, Any]:
     kind = getattr(root, "fused_kind", None)
     if kind:
         sig["fused"] = {"kind": kind, **root.fused_meta()}
+    # low-precision storage (core.enumerate.QuantMeta) changes the lowered
+    # kernel (operand dtype, accumulator, dequant epilogue) — same
+    # only-when-present rule keeps every existing key byte-identical
+    q = getattr(root, "quant", None)
+    if q is not None:
+        sig["quant"] = {"dtype": q.dtype, "accum": q.accum, "scale": q.scale}
     return sig
 
 

@@ -41,6 +41,10 @@ class Epilogue:
     scale: bool = False
     norm: bool = False          # normalize with given (mean, var) stats
     eps: float = 1e-5
+    #: dequantize first: cast the (possibly int32) accumulator to f32 and
+    #: multiply by the ``qscale`` row (combined input scales, one per
+    #: output column — broadcast a constant row for per-tensor scales)
+    dequant: bool = False
 
     def __post_init__(self):
         if self.act not in ACTIVATIONS:
@@ -52,6 +56,8 @@ class Epilogue:
     def vector_names(self) -> Tuple[str, ...]:
         """Extra kernel operands, in argument order."""
         names = []
+        if self.dequant:
+            names.append("qscale")
         if self.scale:
             names.append("scale")
         if self.bias:
@@ -65,9 +71,13 @@ class Epilogue:
         return not self.vector_names and self.act == "id"
 
     def apply(self, acc, vectors: Dict[str, jax.Array]):
-        """Run the tail on the f32 accumulator tile; vectors are f32 rows
+        """Run the tail on the accumulator tile; vectors are f32 rows
         broadcastable against ``acc`` (the generator reshapes them)."""
         y = acc
+        if self.dequant:
+            # scales come first: everything downstream (bias/act/norm)
+            # sees real-valued activations, same as the bf16/f32 path
+            y = y.astype(jnp.float32) * vectors["qscale"]
         if self.scale:
             y = y * vectors["scale"]
         if self.bias:

@@ -43,6 +43,7 @@ def _contract(
     vals: List[jax.Array],
     axlists: List[Tuple[str, ...]],
     out_axes: Tuple[str, ...],
+    acc_dtype=jnp.float32,
 ) -> jax.Array:
     """Contract named-axis blocks down to ``out_axes`` via lax.dot_general.
 
@@ -90,7 +91,7 @@ def _contract(
                 tuple(bx.index(i) for i in batch),
             ),
         )
-        res = lax.dot_general(a, b, dn, preferred_element_type=jnp.float32)
+        res = lax.dot_general(a, b, dn, preferred_element_type=acc_dtype)
         terms = [
             t for z, t in enumerate(terms) if z not in (x, y)
         ]
@@ -99,12 +100,12 @@ def _contract(
     extra = [i for i in axes if i not in out_axes]
     if extra:  # reduce axes touched by a single operand
         val = jnp.sum(
-            val.astype(jnp.float32),
+            val.astype(acc_dtype),
             axis=tuple(axes.index(i) for i in extra),
         )
         axes = [i for i in axes if i not in extra]
     perm = tuple(axes.index(i) for i in out_axes)
-    return jnp.transpose(val.astype(jnp.float32), perm)
+    return jnp.transpose(val.astype(acc_dtype), perm)
 
 
 def _index_map(plan: KernelPlan, axes: Sequence[str]):
@@ -120,6 +121,7 @@ def _make_kernel(
     plan: KernelPlan,
     names: Tuple[str, ...],
     epilogue: Optional[Epilogue],
+    acc_dtype=jnp.float32,
 ):
     spec = plan.spec
     out_axes = spec.output
@@ -154,9 +156,14 @@ def _make_kernel(
                     else slice(None)
                     for a in axes
                 )
-                vals.append(ref[idx])
+                v = ref[idx]
+                # quantized operands (int8 / fp8) land in VMEM at storage
+                # precision; the MXU-side contraction runs on the upcast
+                if v.dtype != acc_dtype and v.dtype.itemsize == 1:
+                    v = v.astype(acc_dtype)
+                vals.append(v)
                 axlists.append(axes)
-            acc_ref[...] += _contract(vals, axlists, out_axes)
+            acc_ref[...] += _contract(vals, axlists, out_axes, acc_dtype)
             return carry
 
         if nsteps == 1:
@@ -209,6 +216,14 @@ class CompiledKernel:
         names = self.names
         epilogue = self.epilogue
         vec_names = epilogue.vector_names if epilogue else ()
+        # low-precision specs carry their accumulator: int8 products sum
+        # exactly in an int32 VMEM scratch; fp8 accumulates in f32
+        quant = getattr(spec.root(), "quant", None)
+        acc_dtype = (
+            jnp.int32
+            if quant is not None and quant.accum == "int32"
+            else jnp.float32
+        )
         grid = plan.grid_shape or (1,)
         last = spec.output[-1]
         last_dim = plan.axes[last].grid_dim
@@ -226,12 +241,24 @@ class CompiledKernel:
             pl.BlockSpec((1, block_last), vec_imap) for _ in vec_names
         ]
         out_spec = pl.BlockSpec(plan.out_block(), _index_map(plan, spec.output))
-        kernel = _make_kernel(plan, names, epilogue)
+        kernel = _make_kernel(plan, names, epilogue, acc_dtype)
 
         def fn(*arrays):
             ops = arrays[: len(names)]
             vecs = arrays[len(names) :]
-            out_dtype = self.out_dtype or ops[0].dtype
+            if self.out_dtype is not None:
+                out_dtype = self.out_dtype
+            elif quant is not None:
+                # int8×int8→int32 (fp8→f32): the accumulator IS the
+                # result, unless a dequant epilogue already rescaled it
+                # back to real values
+                out_dtype = (
+                    jnp.float32
+                    if epilogue is not None and epilogue.dequant
+                    else acc_dtype
+                )
+            else:
+                out_dtype = ops[0].dtype
             rows = tuple(v.reshape(1, -1) for v in vecs)
             return pl.pallas_call(
                 kernel,
@@ -239,7 +266,7 @@ class CompiledKernel:
                 in_specs=in_specs,
                 out_specs=out_spec,
                 out_shape=jax.ShapeDtypeStruct(plan.out_shape(), out_dtype),
-                scratch_shapes=[pltpu.VMEM(plan.out_block(), jnp.float32)],
+                scratch_shapes=[pltpu.VMEM(plan.out_block(), acc_dtype)],
                 compiler_params=COMPILER_PARAMS_CLS(
                     dimension_semantics=("parallel",) * len(grid),
                 ),

@@ -72,6 +72,41 @@ def sjt(n: int) -> Iterator[Tuple[int, ...]]:
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantMeta:
+    """Low-precision storage format of a contraction's operands.
+
+    ``dtype`` is the operand storage dtype, ``accum`` the accumulator the
+    generated kernel carries in VMEM (int8 products must accumulate in
+    int32 to stay exact; fp8 accumulates in f32), and ``scale`` the
+    granularity of the dequantization scales applied by the epilogue
+    (``per_channel`` = one scale per output column, ``per_tensor`` = one
+    scale broadcast over the whole output).  The scales themselves are
+    runtime epilogue vectors, not spec data — the spec only records *that*
+    the kernel's inputs are quantized and how to undo it.
+    """
+
+    dtype: str            # "int8" | "float8_e4m3fn"
+    accum: str            # "int32" | "float32"
+    scale: str = "per_channel"  # "per_channel" | "per_tensor" | "per_block"
+
+    def __post_init__(self):
+        if self.dtype not in ("int8", "float8_e4m3fn"):
+            raise ValueError(f"unsupported quant dtype {self.dtype!r}")
+        if self.accum not in ("int32", "float32"):
+            raise ValueError(f"unsupported quant accumulator {self.accum!r}")
+        if self.scale not in ("per_channel", "per_tensor", "per_block"):
+            raise ValueError(f"unsupported scale granularity {self.scale!r}")
+
+
+#: canonical quant formats; keys are what ``ops.dense(quant=...)``,
+#: ``--quant`` and the search ladder accept
+QUANT_FORMATS: Dict[str, QuantMeta] = {
+    "int8": QuantMeta(dtype="int8", accum="int32"),
+    "fp8": QuantMeta(dtype="float8_e4m3fn", accum="float32"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
 class ContractionSpec:
     """An einsum-like dense contraction expressed over named indices."""
 
@@ -85,6 +120,9 @@ class ContractionSpec:
     #: subdivision provenance: this spec = parent with `split` index subdivided
     parent: "ContractionSpec" = None  # type: ignore
     split: Tuple[str, int] = None  # type: ignore
+    #: low-precision storage format (``subdivide`` drops this like
+    #: ``fused_kind`` — always detect via ``spec.root().quant``)
+    quant: QuantMeta = None  # type: ignore
 
     def __post_init__(self):
         if self.scalar is None:
@@ -179,6 +217,40 @@ def einsum_formula(spec: ContractionSpec) -> str:
 
 
 # canonical specs used by the paper -------------------------------------------
+
+
+def quantize_spec(
+    spec: ContractionSpec, fmt: str = "int8", scale: str = "per_channel"
+) -> ContractionSpec:
+    """Re-tag a ROOT spec as low-precision: same contraction, quant storage.
+
+    The spec *name* stays the family name so plan keys read
+    ``matmul@...@dtype=int8`` — quantization is a storage property, not a
+    new contraction family.  Fused kinds (attention, grouped) have no
+    quant lowering yet and are rejected loudly.
+    """
+    if spec.parent is not None:
+        raise ValueError("quantize_spec expects a root (unsubdivided) spec")
+    if getattr(spec, "fused_kind", ""):
+        raise NotImplementedError(
+            f"fused family {spec.fused_kind!r} has no quantized lowering"
+        )
+    meta = QUANT_FORMATS.get(fmt)
+    if meta is None:
+        raise ValueError(
+            f"unknown quant format {fmt!r} (expected one of "
+            f"{sorted(QUANT_FORMATS)})"
+        )
+    if scale != meta.scale:
+        meta = dataclasses.replace(meta, scale=scale)
+    return dataclasses.replace(spec, quant=meta)
+
+
+def quantized_matmul_spec(
+    n: int, m: int, k: int, fmt: str = "int8", scale: str = "per_channel"
+) -> ContractionSpec:
+    """matmul_spec with int8/fp8 operand storage and scale metadata."""
+    return quantize_spec(matmul_spec(n, m, k), fmt=fmt, scale=scale)
 
 
 def matmul_spec(n: int, m: int, k: int) -> ContractionSpec:

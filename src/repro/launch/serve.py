@@ -57,12 +57,19 @@ class BatchServer:
     def __init__(self, cfg, *, batch_size: int, max_len: int,
                  extra_batch=None, warm_gemms=(), search_gemms=(),
                  search_grads: bool = True, capture: bool = False,
-                 mesh_shape=None):
+                 mesh_shape=None, quant: Optional[str] = None):
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch_size = batch_size
         self.max_len = max_len
         self.extra_batch = extra_batch or {}
+        # --quant int8: weight-only serving quantization.  Params are
+        # quantized ONCE at load (optim.quant.quantize_tree — Quantized is
+        # a registered pytree node, so the 8-bit tree flows through jit)
+        # and expanded INSIDE the jitted step closures: live weights stay
+        # int8 + scales in device memory, the f32 copies are jit
+        # temporaries.
+        self.quant = quant
         # --mesh AxB: sweeps below additionally persist mesh-qualified
         # sharded ladders, and — when this replica can host the mesh —
         # the serving steps trace under it so ops._tuned_kernel dispatches
@@ -119,6 +126,7 @@ class BatchServer:
                 list(points.values()), with_grads=search_grads, plan_db=db,
                 interpret=jax.default_backend() != "tpu",
                 mesh_shape=self.mesh_shape,
+                quant=self.quant,
             )
             log.info("serve", f"capture swept {n} plan point(s) "
                      f"({len(points)} unique GEMM spec(s)) -> {db.path}")
@@ -171,20 +179,32 @@ class BatchServer:
                      "autotune.miss"):
             obs.counter(name).inc(0)
         self.params, _ = self.api.init(cfg, jax.random.key(0))
+        if self.quant:
+            from ..optim.quant import (dequantize_tree, quantize_tree,
+                                       tree_quant_bytes)
+
+            self.params = quantize_tree(self.params, fmt=self.quant)
+            qb = tree_quant_bytes(self.params)
+            obs.gauge("serve.quant_bytes").set(qb)
+            log.info("serve", f"weight-only {self.quant}: "
+                     f"{qb / 2**20:.2f} MiB held as quantized leaves")
+            _deq = dequantize_tree
+        else:
+            _deq = lambda p: p  # noqa: E731
         decode_fn = lambda p, c, t: self.api.decode_step(  # noqa: E731
-            p, self.cfg, c, t
+            _deq(p), self.cfg, c, t
         )
         prefill_fn = lambda p, b: self.api.prefill(  # noqa: E731
-            p, self.cfg, b, self.max_len
+            _deq(p), self.cfg, b, self.max_len
         )
         if self.capture:
             from .. import capture as _capture
 
             decode_fn = _capture.optimize(
-                decode_fn, label=f"{cfg.arch_id}:decode"
+                decode_fn, label=f"{cfg.arch_id}:decode", quant=self.quant
             )
             prefill_fn = _capture.optimize(
-                prefill_fn, label=f"{cfg.arch_id}:prefill"
+                prefill_fn, label=f"{cfg.arch_id}:prefill", quant=self.quant
             )
         self._decode = jax.jit(decode_fn)
         self._prefill_fn = prefill_fn
@@ -395,6 +415,16 @@ def main():
              "--trace",
     )
     ap.add_argument(
+        "--quant", choices=("none", "int8"), default="none",
+        help="weight-only serving quantization: parameters are quantized "
+             "once at load (block-wise int8 + per-block f32 scales, "
+             "optim.quant.quantize_tree) and dequantized inside the "
+             "jitted serving steps, so live weights stay 8-bit in device "
+             "memory.  With --capture the dispatched dense sites also run "
+             "the dynamic-quantized kernel tier and the capture sweep "
+             "persists quantized plan legs",
+    )
+    ap.add_argument(
         "--capture", action="store_true",
         help="whole-model capture (repro.capture): harvest the prefill "
              "+ decode GEMM sets, sweep every harvested spec into the "
@@ -423,6 +453,7 @@ def main():
 
     warm = _parse_shapes("--warm-gemms", args.warm_gemms)
     search = _parse_shapes("--search-gemms", args.search_gemms)
+    quant = None if args.quant == "none" else args.quant
 
     from .serving import (ContinuousEngine, FixedEngine, Gateway,
                           synthetic_trace)
@@ -457,6 +488,7 @@ def main():
             search_gemms=search,
             search_grads=not args.no_search_grads,
             mesh_shape=args.mesh,
+            quant=quant,
         )
     else:
         engine = FixedEngine(
@@ -468,6 +500,7 @@ def main():
             search_grads=not args.no_search_grads,
             capture=args.capture,
             mesh_shape=args.mesh,
+            quant=quant,
         )
     stats = Gateway(engine).run(trace, eos_id=args.eos_id)
     log.info(

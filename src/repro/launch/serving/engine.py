@@ -58,6 +58,7 @@ class ContinuousEngine:
         search_gemms=(),
         search_grads: bool = False,
         mesh_shape=None,
+        quant: Optional[str] = None,
     ):
         self.cfg = cfg
         self.api = get_api(cfg)
@@ -75,11 +76,25 @@ class ContinuousEngine:
         )
         if params is None:
             params, _ = self.api.init(cfg, jax.random.key(0))
+        # --quant int8: weight-only tier.  Quantize the tree once here
+        # (Quantized leaves are registered pytree nodes) and let the
+        # runners dequantize inside their jitted closures — live weights
+        # stay 8-bit + scales, f32 copies are jit temporaries.
+        self.quant = quant
+        if quant:
+            from ...obs import log
+            from ...optim.quant import quantize_tree, tree_quant_bytes
+
+            params = quantize_tree(params, fmt=quant)
+            qb = tree_quant_bytes(params)
+            obs.gauge("serve.quant_bytes").set(qb)
+            log.info("serve", f"weight-only {quant}: "
+                     f"{qb / 2**20:.2f} MiB held as quantized leaves")
         self.params = params
         self.pools = paged.pool_init(cfg, n_pages, page_size)
-        self.prefill = PrefillRunner(cfg, self.api, page_size)
+        self.prefill = PrefillRunner(cfg, self.api, page_size, quant=quant)
         self.decode = DecodeRunner(
-            cfg, self.api, page_size, lanes, self.max_pages
+            cfg, self.api, page_size, lanes, self.max_pages, quant=quant
         )
         if search_gemms:
             self.prefill.sweep(

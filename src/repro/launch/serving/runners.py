@@ -14,7 +14,7 @@ dispatches.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,18 @@ def _sweep(phase: str, shapes, *, with_grads: bool, mesh_shape=None) -> int:
     return n
 
 
+def _deq_fn(quant: Optional[str]):
+    """Param expansion hook for the weight-only quant tier: identity when
+    full-precision, ``optim.quant.dequantize_tree`` when serving ``--quant``
+    — called INSIDE the jitted closures so the f32 weights are jit
+    temporaries and only the 8-bit tree stays live."""
+    if not quant:
+        return lambda p: p
+    from ...optim.quant import dequantize_tree
+
+    return dequantize_tree
+
+
 class PrefillRunner:
     """Batch-1 bucketed prefill: pads the context to a page multiple,
     masks the pads via ``lengths``, and copies the resulting cache pages
@@ -51,13 +63,15 @@ class PrefillRunner:
 
     phase = "prefill"
 
-    def __init__(self, cfg: ModelConfig, api: ModelAPI, page_size: int):
+    def __init__(self, cfg: ModelConfig, api: ModelAPI, page_size: int,
+                 quant: Optional[str] = None):
         self.cfg = cfg
         self.page_size = page_size
+        deq = _deq_fn(quant)
 
         def run(params, tokens, lengths):
             logits, caches = api.prefill(
-                params, cfg, {"tokens": tokens, "lengths": lengths},
+                deq(params), cfg, {"tokens": tokens, "lengths": lengths},
                 tokens.shape[1],
             )
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
@@ -105,16 +119,17 @@ class DecodeRunner:
 
     def __init__(
         self, cfg: ModelConfig, api: ModelAPI, page_size: int,
-        lanes: int, max_pages: int,
+        lanes: int, max_pages: int, quant: Optional[str] = None,
     ):
         self.cfg = cfg
         self.lanes = lanes
         self.max_pages = max_pages
+        deq = _deq_fn(quant)
 
         def step(params, pools, block_table, lens, tokens):
             caches = paged.paged_view(pools, block_table, lens, page_size)
             logits, new_caches = api.decode_step(
-                params, cfg, caches, tokens[:, None]
+                deq(params), cfg, caches, tokens[:, None]
             )
             pools = paged.scatter_token(
                 pools, new_caches, block_table, lens, page_size

@@ -95,7 +95,8 @@ def _mesh_plan_kernel(spec, dtype, *, epilogue=None, interpret=False):
     )
 
 
-def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
+def _tuned_kernel(spec, dtype, *, epilogue=None, out_dtype=None,
+                  interpret=False):
     """Generated kernel for ``spec``: searched plan first, tuned fallback.
 
     The ranked plan database (``repro.search``) is consulted before the
@@ -149,7 +150,8 @@ def _tuned_kernel(spec, dtype, *, epilogue=None, interpret=False):
     if schedule is None:
         schedule = codegen.tune_schedule(spec, dtype=np.dtype(dtype))
     return codegen.cached_compile(
-        spec, schedule, epilogue=epilogue, interpret=interpret
+        spec, schedule, epilogue=epilogue, out_dtype=out_dtype,
+        interpret=interpret,
     )
 
 
@@ -213,8 +215,50 @@ def _dense_raw(x, w, out_dtype, interpret):
     ).astype(out_dtype)
 
 
+def _dense_quant(x, w, fmt, out_dtype, interpret):
+    """Dynamic-quantized dense: int8/fp8 storage, dequant epilogue.
+
+    ``x`` is quantized per-tensor (one absmax scale), ``w`` per output
+    channel (one scale per column of F) — the combined ``qscale = sx * sw``
+    row is exactly what the generated kernel's dequant epilogue multiplies
+    into the accumulator, so the kernel streams 1-byte operands and writes
+    real-valued output in one pass.  Kernel-ineligible shapes take the
+    dequantize-then-dot fallback with identical quantization semantics.
+    """
+    from ..core.enumerate import QUANT_FORMATS, quantized_matmul_spec
+    from ..optim.quant import quantize_channels, quantize_tensor
+
+    if fmt not in QUANT_FORMATS:
+        raise ValueError(
+            f"quant must be one of {sorted(QUANT_FORMATS)}, got {fmt!r}"
+        )
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    qx, sx = quantize_tensor(x2, fmt)
+    qw, sw = quantize_channels(w, fmt)
+    qscale = (sx * sw).astype(jnp.float32)
+    if _dense_kernel_ok(x2, w, interpret):
+        from .. import codegen
+
+        m, d = x2.shape
+        f = w.shape[1]
+        kern = _tuned_kernel(
+            quantized_matmul_spec(m, d, f, fmt), qx.dtype,
+            epilogue=codegen.Epilogue(dequant=True),
+            out_dtype=jnp.float32, interpret=interpret,
+        )
+        out = kern(qx, qw, qscale=qscale)
+    else:
+        out = jnp.dot(
+            qx.astype(jnp.float32), qw.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ) * qscale[None, :]
+    return out.reshape(*lead, w.shape[1]).astype(out_dtype)
+
+
 def dense(x: jax.Array, w: jax.Array, out_dtype=None,
-          interpret: bool = False, differentiable: bool = True) -> jax.Array:
+          interpret: bool = False, differentiable: bool = True,
+          quant=None) -> jax.Array:
     """x: (..., D) @ w: (D, F) -> (..., F), f32 accumulation.
 
     With ``differentiable`` (the default), a call dispatching to the
@@ -222,8 +266,17 @@ def dense(x: jax.Array, w: jax.Array, out_dtype=None,
     custom VJP whose dA/dB GEMMs compile through the generated-kernel
     pipeline under their own derived-spec keys (``matmul.dA`` /
     ``matmul.dB``).  Fallback paths stay natively differentiable.
+
+    ``quant`` ('int8' | 'fp8') takes the low-precision tier instead:
+    operands are dynamically quantized (x per-tensor, w per-channel), the
+    contraction runs on the dtype-qualified searched kernel
+    (``matmul@...@dtype=int8`` plans), and the scales are applied by the
+    kernel's dequant epilogue.  The quant tier is inference-oriented —
+    the quantize ops are differentiable only through the fallback path.
     """
     out_dtype = out_dtype or x.dtype
+    if quant is not None:
+        return _dense_quant(x, w, quant, out_dtype, interpret)
     if differentiable and _dense_kernel_ok(x, w, interpret):
         from ..grad import dense_vjp
 

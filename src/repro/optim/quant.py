@@ -62,3 +62,122 @@ def dequantize(qv: Quantized) -> jax.Array:
 
 def quantization_bytes(qv: Quantized) -> int:
     return qv.q.size + qv.scale.size * 4
+
+
+# ---------------------------------------------------------------------------
+# GEMM-operand quantization (the searched int8/fp8 kernel tier)
+#
+# The block-wise machinery above serves optimizer state; the helpers below
+# produce the *kernel-facing* layout: operands stored at int8/fp8 with a
+# per-tensor scalar or per-output-channel scale row that the generated
+# kernels' dequant epilogue applies after the accumulator
+# (``codegen.Epilogue(dequant=True)``, qscale = sx * sw).
+# ---------------------------------------------------------------------------
+
+#: absmax maps to the largest exactly-representable magnitude per format
+_QMAX = {"int8": 127.0, "fp8": 448.0, "float8_e4m3fn": 448.0}
+
+
+def _storage_dtype(fmt: str):
+    if fmt in ("fp8", "float8_e4m3fn"):
+        dt = getattr(jnp, "float8_e4m3fn", None)
+        if dt is None:
+            raise NotImplementedError(
+                "float8_e4m3fn is not available in this jax build"
+            )
+        return dt
+    if fmt == "int8":
+        return jnp.int8
+    raise ValueError(f"unknown quant format {fmt!r}; have {sorted(_QMAX)}")
+
+
+def _cast(x, fmt: str, scale):
+    y = x.astype(jnp.float32) / scale
+    if fmt == "int8":
+        return jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return y.astype(_storage_dtype(fmt))
+
+
+def quantize_tensor(x: jax.Array, fmt: str = "int8"):
+    """(q, scale): whole-tensor absmax quantization; scale is a scalar.
+
+    Empty tensors (any zero extent) quantize with scale 1.0 — there is
+    nothing to round, but shape/dtype round-trip must still hold.
+    """
+    qmax = _QMAX[fmt]
+    if x.size == 0:
+        scale = jnp.asarray(1.0, jnp.float32)
+        return _cast(x, fmt, scale), scale
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    return _cast(x, fmt, scale), scale.astype(jnp.float32)
+
+
+def quantize_channels(w: jax.Array, fmt: str = "int8"):
+    """(q, scales): per-output-channel quantization of a (..., F) weight.
+
+    One scale per slice of the LAST axis — the output-column granularity
+    the dequant epilogue broadcasts over the accumulator tile.
+    """
+    qmax = _QMAX[fmt]
+    if any(d == 0 for d in w.shape[:-1]):
+        # empty channel slices: nothing to scale, keep scale=1 per channel
+        scale = jnp.ones((w.shape[-1],), jnp.float32)
+        return _cast(w, fmt, scale), scale
+    reduce_axes = tuple(range(w.ndim - 1))
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=reduce_axes)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    return _cast(w, fmt, scale), scale.astype(jnp.float32)
+
+
+#: weight leaves smaller than this stay full-precision in quantize_tree —
+#: biases/norm gains are tiny and precision-critical
+MIN_QUANT_SIZE = 4096
+
+
+def quantize_tree(params, fmt: str = "int8", min_size: int = MIN_QUANT_SIZE):
+    """Weight-only quantization of a parameter pytree, once at load.
+
+    Float arrays with >= 2 dims and >= ``min_size`` elements become
+    ``Quantized`` leaves (block-wise int8 + scales — a registered pytree
+    node, so the tree still flows through jit); everything else passes
+    through.  Pair with ``dequantize_tree`` inside the jitted serving step:
+    live weights stay 8-bit + scales in device memory and the f32 copies
+    are jit temporaries (``launch/serve --quant int8``).
+    """
+    if fmt != "int8":
+        raise NotImplementedError(
+            f"weight-only serving quantization supports 'int8', got {fmt!r}"
+        )
+
+    def leaf(x):
+        if (
+            isinstance(x, (jax.Array,)) or hasattr(x, "shape")
+        ) and getattr(x, "ndim", 0) >= 2 and jnp.issubdtype(
+            jnp.asarray(x).dtype, jnp.floating
+        ) and x.size >= min_size:
+            return quantize(jnp.asarray(x))
+        return x
+
+    return jax.tree_util.tree_map(leaf, params)
+
+
+def dequantize_tree(params):
+    """Inverse of ``quantize_tree``: expand Quantized leaves, pass the rest."""
+    return jax.tree_util.tree_map(
+        lambda x: dequantize(x) if isinstance(x, Quantized) else x,
+        params,
+        is_leaf=lambda x: isinstance(x, Quantized),
+    )
+
+
+def tree_quant_bytes(params) -> int:
+    """Bytes of the quantized leaves (payload + scales) — the memory the
+    weight-only tier actually holds live."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, Quantized)
+    ):
+        if isinstance(leaf, Quantized):
+            total += quantization_bytes(leaf)
+    return total

@@ -125,6 +125,50 @@ def grouped_tail_factor(group_sizes, bm: int) -> float:
     return max(issued / useful, 1.0)
 
 
+#: storage bytes per element of the quantized tiers (core.enumerate
+#: QuantMeta dtypes plus CLI-format aliases)
+QUANT_STORAGE_BYTES = {
+    "int8": 1,
+    "float8_e4m3fn": 1,
+    "fp8": 1,
+}
+
+#: accumulator/output bytes per element (int32 / float32 both 4)
+QUANT_ACCUM_BYTES = 4
+
+
+def quant_byte_model(quant, elem_bytes: int):
+    """(operand_bytes, out_bytes) per element for a maybe-quantized spec.
+
+    ``quant`` is a ``core.enumerate.QuantMeta`` (or None).  Operands of a
+    quantized contraction stream from HBM at storage precision (1 byte);
+    the output leaves at accumulator precision (4 bytes — int32 for int8,
+    f32 for fp8) since the dequant epilogue keeps real values.  Non-quant
+    specs keep the caller's ``elem_bytes`` on both sides — this is the
+    memory-bandwidth advantage the beam scores when it trades precision
+    tiers (``search.beam.estimate``) and the bench gate checks
+    (``scripts/bench_smoke.py --quant``).
+    """
+    if quant is None:
+        return elem_bytes, elem_bytes
+    return QUANT_STORAGE_BYTES[quant.dtype], QUANT_ACCUM_BYTES
+
+
+def quant_hbm_bytes(spec, elem_bytes: int = 4) -> float:
+    """One-pass HBM byte floor of a contraction: read every operand once,
+    write the output once, at the spec's storage precisions."""
+    import math as _math
+
+    root = spec.root()
+    op_b, out_b = quant_byte_model(getattr(root, "quant", None), elem_bytes)
+    read = sum(
+        _math.prod(root.extents[i] for i in axes) * op_b
+        for axes in root.operands.values()
+    )
+    write = _math.prod(root.extents[i] for i in root.output) * out_b
+    return float(read + write)
+
+
 _SUGGEST = {
     "compute": "raise arithmetic efficiency: larger per-chip batch or less "
                "remat recompute (MODEL/HLO flops ratio shows the headroom)",

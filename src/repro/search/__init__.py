@@ -67,11 +67,13 @@ from .plandb import (
     serving_phase,
 )
 from .space import (
+    QUANT_TIERS,
     Candidate,
     MeshVariant,
     block_choices,
     candidate_orders,
     candidate_schedule,
+    dtype_tier_specs,
     make_candidate,
     mesh_descriptor,
     mesh_variants,
@@ -479,6 +481,52 @@ def search_schedule_with_grads(
     }
 
 
+def search_dtype_ladder(
+    spec: ContractionSpec,
+    *,
+    dtype=np.float32,
+    tiers: Sequence[str] = QUANT_TIERS,
+    **kwargs,
+) -> Dict[str, SearchResult]:
+    """Search the dtype axis: the baseline tier plus each quant tier.
+
+    Runs the full ``search_schedule`` pipeline once per point of
+    ``space.dtype_tier_specs`` — the caller's spec at its full/half
+    precision, then the int8 and fp8 re-taggings at their 1-byte storage
+    dtypes.  Every tier persists under its own dtype-qualified plan key
+    (``matmul@...@dtype=int8`` in ``obs.explain`` selector terms), so
+    ``ops.dense(quant=...)`` and the quantized serving path pick up the
+    matching ladder at trace time.  Returns ``{tier -> SearchResult}``
+    with ``"baseline"`` always present; rank tiers against each other
+    with ``best_dtype_tier``.
+    """
+    return {
+        tier: search_schedule(s, dtype=dt, **kwargs)
+        for tier, s, dt in dtype_tier_specs(spec, dtype=dtype, tiers=tiers)
+    }
+
+
+def best_dtype_tier(results: Dict[str, SearchResult]) -> str:
+    """The precision tier the roofline ranks fastest for this shape.
+
+    Compared on the *analytic* score of each tier's best plan — the
+    quant-aware byte model is exactly what distinguishes tiers (operand
+    traffic shrinks 4x at matched shapes), whereas interpreter wall-clock
+    cannot see memory bandwidth.  Accuracy policy stays with the caller;
+    this only says what the hardware model prefers.
+    """
+    if not results:
+        raise ValueError("no tiers searched")
+    return min(
+        results,
+        key=lambda t: (
+            not results[t].best.fits_vmem,
+            results[t].best.score,
+            t,
+        ),
+    )
+
+
 def search_gemm_plans(
     shapes: Sequence[Tuple[int, int, int]],
     *,
@@ -540,12 +588,15 @@ __all__ = [
     "SearchResult",
     "SearchStats",
     "SPEC_FAMILIES",
+    "QUANT_TIERS",
     "active_phase",
     "beam_search",
+    "best_dtype_tier",
     "block_choices",
     "candidate_orders",
     "candidate_schedule",
     "default_plan_db",
+    "dtype_tier_specs",
     "einsum_reference",
     "entry_from",
     "estimate",
@@ -559,6 +610,7 @@ __all__ = [
     "plan_key",
     "reference_arrays",
     "schedule_mesh_axes",
+    "search_dtype_ladder",
     "search_gemm_plans",
     "search_schedule",
     "search_schedule_with_grads",

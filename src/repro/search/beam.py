@@ -120,10 +120,25 @@ def estimate(
         )
         traffic += elems * trips
     out_block = math.prod(blocks[i] for i in spec.output)
-    vmem += 2 * out_block  # out tile + f32 accumulator scratch
-    traffic += math.prod(extents[i] for i in spec.output)
+    out_elems = math.prod(extents[i] for i in spec.output)
 
-    hbm_s = traffic * elem_bytes / hw["hbm_bw"]
+    # quantized specs stream operands at storage precision (1 byte) but
+    # write the 4-byte accumulator/dequantized output — the whole point of
+    # the precision tier.  Non-quant keeps the caller's elem_bytes on both
+    # sides (expressions unchanged so existing scores stay bit-identical).
+    quant = getattr(spec, "quant", None)
+    if quant is None:
+        out_elem_bytes = elem_bytes
+        vmem_bytes = (vmem + 2 * out_block) * elem_bytes
+        hbm_s = (traffic + out_elems) * elem_bytes / hw["hbm_bw"]
+    else:
+        from ..roofline.analysis import quant_byte_model
+
+        op_b, out_elem_bytes = quant_byte_model(quant, elem_bytes)
+        vmem_bytes = vmem * op_b + 2 * out_block * out_elem_bytes
+        hbm_s = (
+            traffic * op_b + out_elems * out_elem_bytes
+        ) / hw["hbm_bw"]
     compute_s = spec.flops() / shards / hw["peak_flops"]
 
     # fused-family terms.  Both stay sound for the bound cut: unassigned
@@ -156,7 +171,7 @@ def estimate(
     if reduce_shards > 1:
         from ..roofline.analysis import sharded_reduce_seconds
 
-        out_bytes = math.prod(extents[i] for i in spec.output) * elem_bytes
+        out_bytes = out_elems * out_elem_bytes
         comm_s = sharded_reduce_seconds(
             out_bytes,
             reduce_shards,
@@ -166,7 +181,7 @@ def estimate(
         )
 
     lower = max(hbm_s, compute_s, comm_s)
-    fits = vmem * elem_bytes <= hw["vmem_bytes"]
+    fits = vmem_bytes <= hw["vmem_bytes"]
 
     decided = assigned if assigned is not None else frozenset(spec.indices)
     penalty = 1.0

@@ -336,6 +336,48 @@ def candidate_schedule(
     return Schedule(s, tuple(mesh_levels + grid + seq + mxu)).validate()
 
 
+#: quantized precision tiers of the dtype axis (core.enumerate
+#: QUANT_FORMATS keys); the baseline tier is whatever dtype the caller
+#: searches at (bf16/f32)
+QUANT_TIERS = ("int8", "fp8")
+
+
+def dtype_tier_specs(
+    spec: ContractionSpec,
+    *,
+    dtype="float32",
+    tiers: Sequence[str] = QUANT_TIERS,
+) -> List[Tuple[str, ContractionSpec, "object"]]:
+    """The dtype axis of the search: (tier, spec, dtype) triples.
+
+    The baseline tier keeps the caller's spec and dtype; each quant tier
+    re-tags the root spec with its ``QuantMeta`` (so plans land under
+    dtype-qualified keys) and searches at the 1-byte storage dtype.  Fused
+    and already-quantized specs get only their baseline row — there is no
+    quant lowering for them yet.  A tier whose storage dtype is not
+    registered in this container (fp8 on old ml_dtypes) is skipped rather
+    than crashing the sweep.
+    """
+    import numpy as np
+
+    from ..core.enumerate import quantize_spec
+
+    root = spec.root()
+    out: List[Tuple[str, ContractionSpec, object]] = [
+        ("baseline", root, np.dtype(dtype))
+    ]
+    if getattr(root, "fused_kind", "") or getattr(root, "quant", None):
+        return out
+    for tier in tiers:
+        q = quantize_spec(root, fmt=tier)
+        try:
+            qdt = np.dtype(q.quant.dtype)
+        except TypeError:
+            continue
+        out.append((tier, q, qdt))
+    return out
+
+
 def sweep_specs(
     spec: ContractionSpec, with_grads: bool = False
 ) -> List[Tuple[str, ContractionSpec]]:

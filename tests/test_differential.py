@@ -321,6 +321,68 @@ def test_ops_dense_act_epilogue_matrix(act, eps, dtype):
             )
 
 
+# ---------------------------------------------------------------------------
+# quantized rows: the same random-legal-schedule draw, at the int8/fp8
+# storage tier, against the dequantize-then-einsum f64 oracle
+# ---------------------------------------------------------------------------
+
+QUANT_SEEDS = tuple(range(3))
+QUANT_CASES = [
+    (fam, seed, fmt)
+    for fam in sorted(FAMILIES)
+    for seed in QUANT_SEEDS
+    for fmt in ("int8", "fp8")
+]
+
+
+@pytest.mark.parametrize("family,seed,fmt", QUANT_CASES)
+def test_generated_kernel_quantized(family, seed, fmt):
+    """Quantized kernels under random legal schedules: the generated kernel
+    over int8/fp8 storage must match the f64 einsum over the *dequantized*
+    operand values — exactly for int8 (int32 accumulation of small-int
+    products is closed), to f32-accumulation tolerance for fp8."""
+    from repro.core.enumerate import QUANT_FORMATS, quantize_spec
+
+    meta = QUANT_FORMATS[fmt]
+    store_dt = getattr(jnp, meta.dtype, None)
+    if store_dt is None:
+        pytest.skip(f"jax build lacks {meta.dtype}")
+
+    base, order, blocks = _draw_case(family, seed)
+    spec = quantize_spec(base.root(), fmt=fmt)
+    schedule = candidate_schedule(spec, order, blocks)
+    # int formats draw small exact integers, fp8 draws normals rounded to
+    # the storage grid — either way np.float64(arrays) IS the dequantized
+    # oracle operand set
+    arrays = reference_arrays(spec, dtype=np.dtype(meta.dtype), seed=seed)
+    ref = einsum_reference(spec, arrays)
+
+    out = _run_kernel(spec, schedule, arrays, store_dt)
+    if fmt == "int8":
+        assert out.dtype == np.float64 and np.all(out == ref), (
+            f"int8 kernel != exact oracle for {family} seed={seed} "
+            f"order={order} blocks={blocks}"
+        )
+    else:
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(
+            out / scale, ref / scale, rtol=1e-4, atol=1e-4,
+            err_msg=f"fp8 kernel != dequantized oracle for {family} "
+                    f"seed={seed} order={order} blocks={blocks}",
+        )
+
+    # the quantized spec keeps the reference interpreter semantics on the
+    # dequantized values (scale application is an epilogue concern)
+    interp = evaluate_variant(
+        spec, spec.indices,
+        {n: np.asarray(a, np.float64) for n, a in arrays.items()},
+    )
+    np.testing.assert_allclose(
+        np.asarray(interp, np.float64), ref, rtol=1e-6, atol=1e-6,
+        err_msg=f"interp != oracle for quantized {family} seed={seed}",
+    )
+
+
 @pytest.mark.parametrize("family", sorted(FAMILIES))
 def test_generated_kernel_bfloat16(family):
     """Low-precision store path: bf16 in/out, f32 accumulation inside."""

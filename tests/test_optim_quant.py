@@ -1,0 +1,264 @@
+"""Property suite for ``optim.quant`` — block-wise state quantization and
+the GEMM-operand helpers behind the int8/fp8 kernel tier.
+
+Each property is checked over a seeded matrix (no hypothesis dependency):
+
+  * per-block round-trip error is bounded by absmax/127 (half a step of
+    the per-block grid, with slack for the f32 divide),
+  * the pad path (n % BLOCK != 0) round-trips exactly to the original
+    length — padding never leaks into the dequantized values,
+  * all-zero blocks take scale exactly 1.0 (no 0/0, and dequantize gives
+    exact zeros),
+  * shape and dtype restore byte-for-byte through quantize/dequantize,
+  * ``quantization_bytes`` is exact arithmetic: payload + 4 bytes per
+    block scale,
+  * the GEMM-operand helpers (per-tensor / per-channel) obey the same
+    absmax/qmax error bound, including empty and all-zero inputs,
+  * ``quantize_tree`` / ``dequantize_tree`` / ``tree_quant_bytes`` hold
+    the weight-only serving contract (min_size and ndim gating, int8-only
+    refusal, jit-compatible Quantized leaves).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.optim.quant import (  # noqa: E402
+    BLOCK,
+    MIN_QUANT_SIZE,
+    Quantized,
+    dequantize,
+    dequantize_tree,
+    quantization_bytes,
+    quantize,
+    quantize_channels,
+    quantize_tensor,
+    quantize_tree,
+    tree_quant_bytes,
+)
+
+SEEDS = tuple(range(8))
+
+#: shapes spanning: multiple blocks, the pad path (n % BLOCK != 0),
+#: a single partial block, exact one block, and >2-D layouts
+SHAPES = (
+    (BLOCK * 3,),
+    (BLOCK * 2 + 17,),
+    (5,),
+    (BLOCK,),
+    (7, 33),
+    (2, 3, 41),
+)
+
+
+def _draw(shape, seed, scale=1.0):
+    rng = np.random.default_rng(17000 + seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# block-wise quantize/dequantize (optimizer-state tier)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_per_block_error_bounded_by_absmax_over_127(shape, seed):
+    x = _draw(shape, seed, scale=float(1 + seed))
+    qv = quantize(jnp.asarray(x))
+    back = np.asarray(dequantize(qv), np.float64)
+
+    flat = x.reshape(-1).astype(np.float64)
+    n = flat.size
+    pad = (-n) % BLOCK
+    blocks = np.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    absmax = np.abs(blocks).max(axis=1)
+    err = np.abs(back.reshape(-1) - flat)
+    err_blocks = np.pad(err, (0, pad)).reshape(-1, BLOCK)
+    # rounding to the per-block grid loses at most half a step; 0.51
+    # leaves room for the f32 divide's own rounding
+    bound = 0.51 * absmax / 127.0
+    assert (err_blocks.max(axis=1) <= bound + 1e-12).all(), (
+        f"per-block error exceeded absmax/127 bound (shape={shape}, "
+        f"seed={seed})"
+    )
+
+
+@pytest.mark.parametrize("n", (1, BLOCK - 1, BLOCK + 1, BLOCK * 2 + 17))
+def test_pad_path_roundtrips_to_original_length(n):
+    x = _draw((n,), seed=n % 7)
+    qv = quantize(jnp.asarray(x))
+    assert qv.q.shape == (-(-n // BLOCK), BLOCK)  # padded payload
+    back = np.asarray(dequantize(qv))
+    assert back.shape == (n,)  # ...but the pad never leaks out
+    np.testing.assert_allclose(
+        back, x, atol=float(np.abs(x).max()) / 127.0 * 0.51 + 1e-12
+    )
+
+
+def test_all_zero_blocks_take_scale_one():
+    # one zero block sandwiched between live ones: its scale must be
+    # exactly 1.0 (not 0, which would NaN the dequantize) and its values
+    # must come back exactly zero
+    x = np.ones((BLOCK * 3,), np.float32)
+    x[BLOCK:2 * BLOCK] = 0.0
+    qv = quantize(jnp.asarray(x))
+    scales = np.asarray(qv.scale).reshape(-1)
+    assert scales[1] == 1.0
+    back = np.asarray(dequantize(qv))
+    assert (back[BLOCK:2 * BLOCK] == 0.0).all()
+
+    all_zero = quantize(jnp.zeros((BLOCK + 3,), jnp.float32))
+    assert (np.asarray(all_zero.scale) == 1.0).all()
+    assert (np.asarray(dequantize(all_zero)) == 0.0).all()
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "float16"])
+@pytest.mark.parametrize("shape", SHAPES[:4])
+def test_shape_and_dtype_restoration(shape, dtype):
+    dt = jnp.dtype(dtype)
+    x = jnp.asarray(_draw(shape, seed=1), dt)
+    qv = quantize(x)
+    back = dequantize(qv)
+    assert back.shape == x.shape
+    assert back.dtype == dt
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_quantization_bytes_exact(shape):
+    qv = quantize(jnp.asarray(_draw(shape, seed=2)))
+    n = int(np.prod(shape))
+    nblocks = -(-n // BLOCK)
+    # payload: one int8 per padded element; scales: one f32 per block
+    assert quantization_bytes(qv) == nblocks * BLOCK + nblocks * 4
+
+
+# ---------------------------------------------------------------------------
+# GEMM-operand helpers (the kernel tier's layouts)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8"])
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_quantize_tensor_error_bound(fmt, seed):
+    if fmt == "fp8" and not hasattr(jnp, "float8_e4m3fn"):
+        pytest.skip("jax build lacks float8_e4m3fn")
+    qmax = {"int8": 127.0, "fp8": 448.0}[fmt]
+    x = _draw((37, 23), seed, scale=3.0)
+    q, s = quantize_tensor(jnp.asarray(x), fmt)
+    assert np.asarray(s).shape == ()
+    back = np.asarray(q, np.float64) * float(s)
+    absmax = np.abs(x).max()
+    if fmt == "int8":
+        bound = 0.51 * absmax / qmax
+    else:
+        # fp8 e4m3: ~3 mantissa bits, relative grid ~2^-3 near each value
+        bound = absmax / qmax + np.abs(x) * 2.0 ** -3
+    assert (np.abs(back - x) <= bound + 1e-9).all()
+
+
+def test_quantize_channels_is_per_last_axis():
+    rng = np.random.default_rng(17100)
+    w = (rng.standard_normal((24, 6))
+         * np.logspace(-2, 2, 6)[None, :]).astype(np.float32)
+    q, s = quantize_channels(jnp.asarray(w), "int8")
+    assert np.asarray(s).shape == (6,)
+    back = np.asarray(q, np.float64) * np.asarray(s, np.float64)[None, :]
+    col_absmax = np.abs(w).max(axis=0)
+    err = np.abs(back - w).max(axis=0)
+    assert (err <= 0.51 * col_absmax / 127.0 + 1e-9).all(), (
+        "per-channel error must be bounded by each column's OWN absmax — "
+        "a global scale would violate this on the small columns"
+    )
+
+
+def test_gemm_helpers_empty_and_zero_inputs():
+    q, s = quantize_tensor(jnp.zeros((0, 8), jnp.float32), "int8")
+    assert q.shape == (0, 8) and q.dtype == jnp.int8 and float(s) == 1.0
+    q, s = quantize_channels(jnp.zeros((0, 8), jnp.float32), "int8")
+    assert q.shape == (0, 8) and np.asarray(s).shape == (8,)
+    assert (np.asarray(s) == 1.0).all()
+    # all-zero (non-empty): scale 1.0, payload exact zeros
+    q, s = quantize_tensor(jnp.zeros((4, 4), jnp.float32), "int8")
+    assert float(s) == 1.0 and (np.asarray(q) == 0).all()
+
+
+def test_gemm_helpers_unknown_format():
+    with pytest.raises(KeyError):
+        quantize_tensor(jnp.ones((4, 4)), "int3")
+
+
+# ---------------------------------------------------------------------------
+# weight-only serving tree (quantize once at load, dequantize inside jit)
+# ---------------------------------------------------------------------------
+
+
+def _params(rng):
+    return {
+        "proj": jnp.asarray(rng.standard_normal((96, 64)), jnp.float32),
+        "tiny": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+        "bias": jnp.asarray(rng.standard_normal(64), jnp.float32),
+        "step": jnp.asarray(3, jnp.int32),
+    }
+
+
+def test_quantize_tree_gates_on_size_and_ndim():
+    params = _params(np.random.default_rng(17200))
+    qt = quantize_tree(params, fmt="int8", min_size=1024)
+    assert isinstance(qt["proj"], Quantized)       # 96*64 >= 1024, ndim 2
+    assert isinstance(qt["tiny"], jax.Array)       # too small
+    assert isinstance(qt["bias"], jax.Array)       # 1-D: precision-critical
+    assert qt["step"].dtype == jnp.int32           # non-float passthrough
+
+    # default threshold pins the documented MIN_QUANT_SIZE
+    qt_default = quantize_tree(params, fmt="int8")
+    assert (96 * 64 >= MIN_QUANT_SIZE) == isinstance(
+        qt_default["proj"], Quantized
+    )
+
+
+def test_quantize_tree_rejects_non_int8():
+    with pytest.raises(NotImplementedError, match="int8"):
+        quantize_tree(_params(np.random.default_rng(0)), fmt="fp8")
+
+
+def test_dequantize_tree_roundtrip_and_bytes():
+    params = _params(np.random.default_rng(17300))
+    qt = quantize_tree(params, fmt="int8", min_size=1024)
+    back = dequantize_tree(qt)
+    assert back["proj"].shape == params["proj"].shape
+    assert back["proj"].dtype == params["proj"].dtype
+    np.testing.assert_allclose(
+        np.asarray(back["proj"]), np.asarray(params["proj"]),
+        atol=float(jnp.abs(params["proj"]).max()) / 127.0 * 0.51 + 1e-9,
+    )
+    # untouched leaves pass through identically
+    assert back["tiny"] is qt["tiny"]
+
+    n = 96 * 64
+    nblocks = -(-n // BLOCK)
+    assert tree_quant_bytes(qt) == nblocks * BLOCK + nblocks * 4
+    assert tree_quant_bytes(params) == 0  # nothing quantized yet
+
+
+def test_quantized_leaves_flow_through_jit():
+    params = _params(np.random.default_rng(17400))
+    qt = quantize_tree(params, fmt="int8", min_size=1024)
+
+    @jax.jit
+    def step(p, x):
+        p = dequantize_tree(p)
+        return x @ p["proj"] + p["bias"]
+
+    x = jnp.asarray(
+        np.random.default_rng(17500).standard_normal((4, 96)), jnp.float32
+    )
+    out = step(qt, x)
+    ref = x @ dequantize_tree(qt)["proj"] + qt["bias"]
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6
+    )

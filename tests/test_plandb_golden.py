@@ -35,13 +35,19 @@ themselves).  Their signatures fold ``fused_meta()`` (causal flag, group
 sizes) into the digest, so a causal attention plan can never be served to
 a full-attention call site — pinned below without fixture entries.
 
+ISSUE 10 adds the quantized tier: the ``matmul@512x512x512@dtype=int8``
+and ``@dtype=float8_e4m3fn`` keys (``quantize_spec`` re-taggings; the
+signature folds the ``quant`` metadata so a quant plan key can never
+collide with the bf16/f32 key at the same geometry), and pins that the
+``obs_report --explain`` ``@dtype=`` selector resolves them.
+
 Regenerate only after a deliberate format bump (``PLAN_VERSION``):
 
     import numpy as np
     import repro.codegen.cache as cache_mod
     cache_mod.hardware_fingerprint = lambda: "golden/fixture-hw"
     from repro.core.enumerate import (
-        attention_spec, matmul_spec, uniform_grouped_spec,
+        attention_spec, matmul_spec, quantize_spec, uniform_grouped_spec,
     )
     from repro.grad import derived_specs
     from repro.search import PlanDB, search_schedule
@@ -61,6 +67,8 @@ Regenerate only after a deliberate format bump (``PLAN_VERSION``):
         (da["Q"], f32, None), (da["K"], f32, None), (da["V"], f32, None),
         (grp, f32, None),
         (dg["X"], f32, None), (dg["W"], f32, None),
+        (quantize_spec(fwd, fmt="int8"), np.dtype(np.int8), None),
+        (quantize_spec(fwd, fmt="fp8"), np.dtype("float8_e4m3fn"), None),
     ]:
         search_schedule(spec, dtype=dt, beam_width=4, topk=3,
                         measure=False, plan_db=db, use_cached_plan=False,
@@ -81,6 +89,7 @@ from repro.codegen.cache import schedule_from_dict, schedule_to_dict
 from repro.core.enumerate import (
     attention_spec,
     matmul_spec,
+    quantize_spec,
     uniform_grouped_spec,
 )
 from repro.core.schedule import MESH_TIERS
@@ -117,6 +126,11 @@ FIXTURE_POINTS = [
     ("grouped_matmul", _GRP, _F32, None),
     ("grouped_matmul.dX", _DG["X"], _F32, None),
     ("grouped_matmul.dW", _DG["W"], _F32, None),
+    # ISSUE 10: the quantized tier's dtype-qualified keys
+    ("matmul@int8", quantize_spec(_FWD, fmt="int8"),
+     np.dtype(np.int8), None),
+    ("matmul@fp8", quantize_spec(_FWD, fmt="fp8"),
+     np.dtype("float8_e4m3fn"), None),
 ]
 
 
@@ -227,6 +241,63 @@ def test_fused_meta_is_part_of_the_key():
     assert plan_key(ragged, np.float32, hardware=GOLDEN_HW) != plan_key(
         other, np.float32, hardware=GOLDEN_HW
     )
+
+
+def test_quant_keys_disjoint_from_full_precision(fixture_data):
+    """The quant tier's keys can never collide with the bf16/f32 ladders
+    at the same geometry: the signature folds the quant metadata AND the
+    dtype string differs — either alone would already separate them."""
+    qspec = quantize_spec(_FWD, fmt="int8")
+    qkey = plan_key(qspec, np.dtype(np.int8), hardware=GOLDEN_HW)
+    full_keys = {
+        plan_key(_FWD, _F32, hardware=GOLDEN_HW),
+        plan_key(_FWD, np.dtype("bfloat16"), hardware=GOLDEN_HW),
+        plan_key(_FWD, _F32, hardware=GOLDEN_HW, mesh="2x4"),
+    }
+    assert qkey not in full_keys
+    # belt and braces: even at the SAME dtype string, the re-tagged spec
+    # keys apart from the plain one
+    assert plan_key(
+        qspec, np.dtype("bfloat16"), hardware=GOLDEN_HW
+    ) != plan_key(_FWD, np.dtype("bfloat16"), hardware=GOLDEN_HW)
+    # and the committed entries self-describe their quant storage
+    entry = fixture_data[qkey]
+    assert entry["dtype"] == "int8"
+    assert entry["spec"]["quant"] == {
+        "dtype": "int8", "accum": "int32", "scale": "per_channel",
+    }
+    fp8 = fixture_data[plan_key(
+        quantize_spec(_FWD, fmt="fp8"), np.dtype("float8_e4m3fn"),
+        hardware=GOLDEN_HW,
+    )]
+    assert fp8["spec"]["quant"]["accum"] == "float32"
+    # full-precision entries must NOT grow a quant field (signature stays
+    # byte-identical for existing keys)
+    f32_entry = fixture_data[plan_key(_FWD, _F32, hardware=GOLDEN_HW)]
+    assert "quant" not in f32_entry["spec"]
+
+
+def test_explain_selector_resolves_quant_dtype():
+    """``obs_report --explain 'matmul@512x512x512@dtype=int8'`` must find
+    exactly the quant entry — the human-facing route to a quant ladder."""
+    from repro.obs.explain import explain, match_entries
+
+    with open(FIXTURE) as f:
+        data = json.load(f)
+    hits = match_entries(data, "matmul@512x512x512@dtype=int8")
+    assert len(hits) == 1
+    key, entry = hits[0]
+    assert key == plan_key(
+        quantize_spec(_FWD, fmt="int8"), np.dtype(np.int8),
+        hardware=GOLDEN_HW,
+    )
+    assert entry["spec"]["quant"]["dtype"] == "int8"
+    rendered = explain(FIXTURE, "matmul@512x512x512@dtype=int8")
+    assert "@dtype=int8" in rendered
+    # the unqualified selector must keep resolving to the f32 ladder,
+    # not the quant one
+    base_hits = match_entries(data, "matmul@512x512x512@dtype=float32")
+    assert len(base_hits) == 1 and base_hits[0][0] != key
 
 
 @pytest.mark.parametrize(

@@ -1,0 +1,498 @@
+"""Quantized generated kernels (int8 / fp8): the tentpole pinning suite.
+
+Every quant path reachable from the public surfaces — quantized specs,
+the dequant epilogue, the searched dtype ladder, ``ops.dense(quant=...)``,
+capture dispatch and weight-only serving — is pinned against an oracle:
+
+  * the generated kernel over int8/fp8 storage vs the dequantize-then-
+    einsum f64 oracle (exact for int8, f32-accumulation tolerance for fp8),
+  * the scale-application epilogue legs (per-channel AND per-tensor) vs
+    the HoF reference interpreter (``core.interp``) over the dequantized
+    operand values,
+  * empty / odd-extent / scale-granularity edge cases,
+  * golden plan-key pins: quant keys are stable derivations, disjoint
+    from the bf16/f32 keys at the same geometry,
+  * the fused-family refusal surfaces (no epilogue / no mesh tier / no
+    quantized lowering), pinned to their exact messages.
+
+Like the differential suite, every case draws from an explicit PRNG seed
+matrix — failures reproduce from the parametrization id alone.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro import codegen, ops  # noqa: E402
+from repro.codegen.cache import cache_key, spec_signature  # noqa: E402
+from repro.core.enumerate import (  # noqa: E402
+    QUANT_FORMATS,
+    QuantMeta,
+    attention_spec,
+    evaluate_variant,
+    matmul_spec,
+    quantize_spec,
+    quantized_matmul_spec,
+)
+from repro.optim.quant import (  # noqa: E402
+    quantize_channels,
+    quantize_tensor,
+)
+from repro.search import (  # noqa: E402
+    QUANT_TIERS,
+    best_dtype_tier,
+    candidate_schedule,
+    dtype_tier_specs,
+    einsum_reference,
+    reference_arrays,
+    search_dtype_ladder,
+)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_caches(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    monkeypatch.setenv("REPRO_PLAN_DB", str(tmp_path / "plans.json"))
+
+
+def _storage_jnp(fmt: str):
+    dt = getattr(jnp, QUANT_FORMATS[fmt].dtype, None)
+    if dt is None:
+        pytest.skip(f"jax build lacks {QUANT_FORMATS[fmt].dtype}")
+    return dt
+
+
+# ---------------------------------------------------------------------------
+# spec layer: QuantMeta validation, quantize_spec guards, quant survives
+# subdivision via root()
+# ---------------------------------------------------------------------------
+
+
+class TestQuantSpec:
+    def test_quant_meta_validates_fields(self):
+        QuantMeta(dtype="int8", accum="int32")  # the canonical formats
+        QuantMeta(dtype="float8_e4m3fn", accum="float32",
+                  scale="per_tensor")
+        with pytest.raises(ValueError, match="unsupported quant dtype"):
+            QuantMeta(dtype="int4", accum="int32")
+        with pytest.raises(ValueError, match="unsupported quant accumulator"):
+            QuantMeta(dtype="int8", accum="float16")
+        with pytest.raises(ValueError, match="unsupported scale granularity"):
+            QuantMeta(dtype="int8", accum="int32", scale="per_row")
+
+    def test_quantize_spec_rejects_non_root(self):
+        child = matmul_spec(4, 4, 4).subdivide("i", 2)
+        with pytest.raises(ValueError, match="root"):
+            quantize_spec(child, fmt="int8")
+
+    def test_quantize_spec_rejects_fused(self):
+        with pytest.raises(
+            NotImplementedError,
+            match="fused family 'attention' has no quantized lowering",
+        ):
+            quantize_spec(attention_spec(2, 8, 8, 4), fmt="int8")
+
+    def test_quantize_spec_rejects_unknown_format(self):
+        with pytest.raises(ValueError, match="unknown quant format 'int4'"):
+            quantize_spec(matmul_spec(4, 4, 4), fmt="int4")
+
+    def test_quant_survives_subdivision_via_root(self):
+        spec = quantized_matmul_spec(8, 8, 8, fmt="int8")
+        child = spec.subdivide("i", 2).subdivide("k", 4)
+        # subdivide drops the field on children (like fused_kind); the
+        # detection contract is always getattr(spec.root(), "quant", None)
+        assert getattr(child, "quant", None) is None
+        assert child.root().quant == QUANT_FORMATS["int8"]
+
+    def test_quantized_spec_keeps_family_name(self):
+        # quantization is a storage property, not a new family: the name
+        # (and therefore the plan-key family prefix) must not change
+        assert quantized_matmul_spec(8, 8, 8).name == matmul_spec(8, 8, 8).name
+
+
+# ---------------------------------------------------------------------------
+# golden plan-key pins: quant signatures are stable derivations, disjoint
+# from the full-precision keys at the same geometry
+# ---------------------------------------------------------------------------
+
+
+class TestQuantKeys:
+    def test_signature_folds_quant_only_when_present(self):
+        plain = spec_signature(matmul_spec(64, 64, 64))
+        assert "quant" not in plain  # pre-quant signatures stay byte-equal
+        q = spec_signature(quantized_matmul_spec(64, 64, 64, fmt="int8"))
+        assert q["quant"] == {
+            "dtype": "int8", "accum": "int32", "scale": "per_channel",
+        }
+        base = {k: v for k, v in q.items() if k != "quant"}
+        assert base == plain
+
+    @pytest.mark.parametrize("fmt", sorted(QUANT_FORMATS))
+    def test_quant_keys_disjoint_from_bf16(self, fmt):
+        meta = QUANT_FORMATS[fmt]
+        spec = matmul_spec(128, 128, 128)
+        qspec = quantize_spec(spec, fmt=fmt)
+        keys = {
+            cache_key(spec, dtype=np.dtype(np.float32), hardware="pin/hw"),
+            cache_key(spec, dtype=jnp.bfloat16, hardware="pin/hw"),
+            cache_key(qspec, dtype=np.dtype(meta.dtype), hardware="pin/hw"),
+            # even at the SAME dtype string the quant signature separates:
+            # a re-tagged spec never collides with the full-precision plan
+            cache_key(qspec, dtype=jnp.bfloat16, hardware="pin/hw"),
+        }
+        assert len(keys) == 4
+
+    def test_quant_key_derivation_is_stable(self):
+        a = cache_key(
+            quantized_matmul_spec(64, 64, 64, fmt="int8"),
+            dtype=np.dtype(np.int8), hardware="pin/hw",
+        )
+        b = cache_key(
+            quantize_spec(matmul_spec(64, 64, 64), fmt="int8"),
+            dtype=np.dtype(np.int8), hardware="pin/hw",
+        )
+        assert a == b  # same logical point -> same key, however constructed
+        assert a != cache_key(
+            quantized_matmul_spec(64, 64, 64, fmt="int8", scale="per_tensor"),
+            dtype=np.dtype(np.int8), hardware="pin/hw",
+        )  # scale granularity is part of the key
+
+
+# ---------------------------------------------------------------------------
+# fused-family refusal surfaces, pinned to their exact messages
+# ---------------------------------------------------------------------------
+
+
+class TestFusedRefusals:
+    def _fused_schedule(self, spec):
+        order = tuple(spec.indices)
+        blocks = {i: spec.extents[i] for i in spec.indices}
+        return candidate_schedule(spec, order, blocks)
+
+    def test_fused_kernels_take_no_epilogue(self):
+        spec = attention_spec(2, 8, 8, 4)
+        sched = self._fused_schedule(spec)
+        with pytest.raises(
+            NotImplementedError, match="^fused kernels take no epilogue$"
+        ):
+            codegen.compile(
+                spec, sched, interpret=True,
+                epilogue=codegen.Epilogue(dequant=True),
+            )
+
+    def test_fused_families_have_no_mesh_tier(self):
+        spec = attention_spec(2, 8, 8, 4)
+        sched = self._fused_schedule(spec)
+        with pytest.raises(
+            NotImplementedError,
+            match="^fused families have no mesh tier yet$",
+        ):
+            codegen.compile(spec, sched, interpret=True, mesh=object())
+
+
+# ---------------------------------------------------------------------------
+# scale-application legs: dequant epilogue vs core.interp over the
+# dequantized operands — per-channel AND per-tensor granularity
+# ---------------------------------------------------------------------------
+
+SCALE_SEEDS = tuple(range(4))
+
+
+class TestScaleApplication:
+    @pytest.mark.parametrize("seed", SCALE_SEEDS)
+    @pytest.mark.parametrize("granularity", ["per_channel", "per_tensor"])
+    def test_dequant_epilogue_matches_interp(self, granularity, seed):
+        fmt = "int8"
+        rng = np.random.default_rng(12000 + seed)
+        m, d, f = 8, 6, 4
+        x = rng.standard_normal((m, d)).astype(np.float32)
+        # wildly different column magnitudes: the case per-channel exists
+        # for (and where per-tensor visibly loses precision)
+        w = (rng.standard_normal((d, f))
+             * np.logspace(-2, 2, f)[None, :]).astype(np.float32)
+
+        qx, sx = quantize_tensor(jnp.asarray(x), fmt)
+        if granularity == "per_channel":
+            qw, sw = quantize_channels(jnp.asarray(w), fmt)
+            qscale = (sx * sw).astype(jnp.float32)
+        else:
+            qw, sw = quantize_tensor(jnp.asarray(w), fmt)
+            qscale = jnp.full((f,), float(sx * sw), jnp.float32)
+
+        spec = quantized_matmul_spec(m, d, f, fmt=fmt, scale=granularity)
+        sched = candidate_schedule(
+            spec, tuple(spec.indices),
+            {i: spec.extents[i] for i in spec.indices},
+        )
+        kern = codegen.compile(
+            spec, sched, interpret=True,
+            epilogue=codegen.Epilogue(dequant=True),
+        )
+        out = np.asarray(kern(qx, qw, qscale=qscale), np.float64)
+        assert out.dtype == np.float64 and out.shape == (m, f)
+
+        # oracle: the HoF reference interpreter over the DEQUANTIZED
+        # operand values, scales applied the same way the epilogue does
+        deq = {
+            "A": np.asarray(qx, np.float64) * float(sx),
+            "B": np.asarray(qw, np.float64) * (
+                np.asarray(sw, np.float64)[None, :]
+                if granularity == "per_channel" else float(sw)
+            ),
+        }
+        ref = np.asarray(
+            evaluate_variant(spec, spec.indices, deq), np.float64
+        )
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(
+            out / scale, ref / scale, rtol=1e-5, atol=1e-5,
+            err_msg=f"dequant epilogue ({granularity}) != interp oracle "
+                    f"(seed={seed})",
+        )
+
+    def test_per_channel_beats_per_tensor_on_skewed_weights(self):
+        rng = np.random.default_rng(12100)
+        x = rng.standard_normal((16, 12)).astype(np.float32)
+        w = (rng.standard_normal((12, 8))
+             * np.logspace(-3, 1, 8)[None, :]).astype(np.float32)
+        ref = x.astype(np.float64) @ w.astype(np.float64)
+
+        # ops.dense's quant tier IS per-channel on w
+        per_channel = np.asarray(
+            ops.dense(jnp.asarray(x), jnp.asarray(w), quant="int8"),
+            np.float64,
+        )
+        qx, sx = quantize_tensor(jnp.asarray(x), "int8")
+        qw, sw = quantize_tensor(jnp.asarray(w), "int8")
+        per_tensor = (np.asarray(qx, np.float64) @
+                      np.asarray(qw, np.float64)) * float(sx) * float(sw)
+
+        def worst_col_rel(out):
+            # per-COLUMN relative error: max-abs error hides the contrast
+            # because both granularities agree on the largest column
+            return (np.abs(out - ref).max(axis=0)
+                    / np.abs(ref).max(axis=0)).max()
+
+        assert worst_col_rel(per_channel) < 0.05
+        assert worst_col_rel(per_channel) < 0.1 * worst_col_rel(per_tensor), (
+            "per-channel scales must beat per-tensor on column-skewed "
+            "weights — that is the granularity's reason to exist"
+        )
+
+
+# ---------------------------------------------------------------------------
+# differential matrix: the searched ladder's quant kernels vs the
+# dequantized-oracle, with bounded max_err and disjoint plan keys
+# ---------------------------------------------------------------------------
+
+LADDER_SHAPES = ((8, 8, 8), (16, 4, 8))
+
+
+class TestSearchedLadder:
+    @pytest.mark.parametrize("m,k,n", LADDER_SHAPES)
+    def test_ladder_tiers_measured_against_dequant_oracle(self, m, k, n):
+        from repro.search import default_plan_db
+
+        for fmt in QUANT_FORMATS:
+            _storage_jnp(fmt)  # skip early if the build lacks fp8
+        results = search_dtype_ladder(
+            matmul_spec(m, k, n), dtype=np.float32,
+            beam_width=4, topk=2, interpret=True, measure=True,
+            plan_db=default_plan_db(),
+        )
+        assert set(results) == {"baseline", *QUANT_TIERS}
+        # measurement ran the kernel against the f64 dequantized oracle
+        # (reference_arrays draws exact small ints for int storage):
+        # int8 must be exact, fp8 within f32-accumulation tolerance
+        assert results["int8"].best.max_err == 0.0
+        assert results["fp8"].best.max_err is not None
+        assert results["fp8"].best.max_err <= 1e-3
+        assert results["baseline"].best.max_err <= 1e-3
+        # each tier persisted under its own dtype-qualified plan key
+        keys = {t: r.db_key for t, r in results.items()}
+        assert all(keys.values()) and len(set(keys.values())) == 3
+
+    def test_quant_tier_wins_the_analytic_roofline(self):
+        results = search_dtype_ladder(
+            matmul_spec(8, 8, 8), dtype=np.float32,
+            beam_width=4, topk=2, interpret=True, measure=False,
+        )
+        # 1-byte operands cut HBM traffic ~4x at matched shapes; the
+        # analytic score must reflect it and best_dtype_tier must pick a
+        # quant tier over the f32 baseline
+        base = results["baseline"].best.score
+        assert results["int8"].best.score < base
+        assert results["fp8"].best.score < base
+        assert best_dtype_tier(results) in QUANT_TIERS
+
+    def test_dtype_tier_specs_baseline_only_for_fused(self):
+        tiers = dtype_tier_specs(attention_spec(2, 8, 8, 4))
+        assert [t for t, _, _ in tiers] == ["baseline"]
+
+
+# ---------------------------------------------------------------------------
+# ops.dense quant tier: kernel path, fallback path, edge cases
+# ---------------------------------------------------------------------------
+
+
+class TestOpsDenseQuant:
+    @pytest.mark.parametrize("fmt", sorted(QUANT_FORMATS))
+    def test_kernel_path_matches_dequant_oracle(self, fmt):
+        _storage_jnp(fmt)
+        rng = np.random.default_rng(13000)
+        m = d = f = 128  # aligned: takes the generated-kernel path
+        x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((d, f)) / 8, jnp.float32)
+
+        out = np.asarray(
+            ops.dense(x, w, quant=fmt, interpret=True), np.float64
+        )
+        assert out.shape == (m, f)
+
+        # oracle: f64 product of the dequantized operands — exactly what
+        # the kernel's int32/f32 accumulator + qscale epilogue computes
+        qx, sx = quantize_tensor(x, fmt)
+        qw, sw = quantize_channels(w, fmt)
+        ref = (np.asarray(qx, np.float64) * float(sx)) @ (
+            np.asarray(qw, np.float64) * np.asarray(sw, np.float64)[None, :]
+        )
+        scale = max(np.abs(ref).max(), 1.0)
+        np.testing.assert_allclose(
+            out / scale, ref / scale, rtol=1e-5, atol=1e-5,
+            err_msg=f"ops.dense(quant={fmt!r}) kernel path != dequantized "
+                    "oracle",
+        )
+        # end-to-end quantization error vs the full-precision product
+        # stays in the dynamic-quantization regime
+        full = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+        rel = np.abs(out - full).max() / max(np.abs(full).max(), 1.0)
+        assert rel < (0.05 if fmt == "int8" else 0.1)
+
+    def test_fallback_path_odd_shapes(self):
+        # unaligned extents can't take the kernel; the fallback must keep
+        # identical quantization semantics
+        rng = np.random.default_rng(13100)
+        x = jnp.asarray(rng.standard_normal((3, 5, 60)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((60, 7)), jnp.float32)
+        out = np.asarray(ops.dense(x, w, quant="int8"), np.float64)
+        assert out.shape == (3, 5, 7)
+        qx, sx = quantize_tensor(x.reshape(-1, 60), "int8")
+        qw, sw = quantize_channels(w, "int8")
+        ref = ((np.asarray(qx, np.float64) * float(sx)) @ (
+            np.asarray(qw, np.float64) * np.asarray(sw, np.float64)[None, :]
+        )).reshape(3, 5, 7)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_empty_batch(self):
+        x = jnp.zeros((0, 16), jnp.float32)
+        w = jnp.ones((16, 8), jnp.float32)
+        out = ops.dense(x, w, quant="int8")
+        assert out.shape == (0, 8) and out.dtype == jnp.float32
+
+    def test_unknown_format_raises(self):
+        with pytest.raises(ValueError, match="int4"):
+            ops.dense(
+                jnp.ones((4, 4)), jnp.ones((4, 4)), quant="int4"
+            )
+
+    def test_odd_extent_kernel_exact_small_ints(self):
+        # odd extents through the raw quant kernel (no epilogue): int32
+        # accumulation of small-int products is closed, so equality is
+        # exact, padding included
+        rng = np.random.default_rng(13200)
+        spec = quantized_matmul_spec(3, 7, 5, fmt="int8")
+        sched = candidate_schedule(
+            spec, tuple(spec.indices), {"i": 3, "j": 7, "k": 5}
+        )
+        arrays = reference_arrays(spec, dtype=np.int8, seed=5)
+        kern = codegen.compile(spec, sched, interpret=True)
+        out = np.asarray(kern(*(
+            jnp.asarray(arrays[nm], jnp.int8) for nm in spec.operands
+        )))
+        assert out.dtype == np.int32
+        ref = einsum_reference(spec, arrays)
+        assert np.array_equal(out, ref.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# capture + serving: the quant policy threads end to end
+# ---------------------------------------------------------------------------
+
+
+class TestQuantIntegration:
+    def test_capture_dispatches_quant_dense(self):
+        from repro import capture
+
+        def f(x, w1, w2):
+            return jnp.dot(jnp.tanh(jnp.dot(x, w1)), w2)
+
+        rng = np.random.default_rng(14000)
+        x = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        w1 = jnp.asarray(rng.standard_normal((128, 128)) / 11, jnp.float32)
+        w2 = jnp.asarray(rng.standard_normal((128, 128)) / 11, jnp.float32)
+        ref = f(x, w1, w2)
+
+        qf = capture.optimize(f, interpret=True, quant="int8")
+        out = qf(x, w1, w2)
+        assert qf.report_for(x, w1, w2).dispatched == 2
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.05, f"quantized capture diverged: rel={rel}"
+
+    def test_sweep_captured_persists_quant_leg(self, tmp_path):
+        from repro.capture import sweep_captured
+        from repro.search import PlanDB
+
+        db = PlanDB(str(tmp_path / "qdb.json"))
+        n = sweep_captured(
+            [("t", matmul_spec(16, 16, 16), "float32")],
+            with_grads=False, measure=False, plan_db=db, quant="int8",
+        )
+        assert n == 2  # fwd + fwd@int8
+        import json
+
+        with open(db.path) as fh:
+            entries = list(json.load(fh).values())
+        quants = [e for e in entries if e["spec"].get("quant")]
+        assert len(quants) == 1
+        assert quants[0]["dtype"] == "int8"
+        assert quants[0]["spec"]["quant"]["accum"] == "int32"
+
+    def test_sweep_captured_rejects_unknown_quant(self):
+        from repro.capture import sweep_captured
+
+        with pytest.raises(ValueError, match="quant must be one of"):
+            sweep_captured(
+                [("t", matmul_spec(8, 8, 8), "float32")], quant="int4"
+            )
+
+    def test_weight_only_serving_dequantizes_inside_jit(self):
+        """quantize_tree once at load + dequantize inside a jitted step
+        must equal quantize-then-dequantize outside jit — the serving
+        contract of ``--quant int8``."""
+        from repro.optim.quant import (Quantized, dequantize_tree,
+                                       quantize_tree, tree_quant_bytes)
+
+        rng = np.random.default_rng(14100)
+        params = {
+            "proj": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32),
+            "bias": jnp.asarray(rng.standard_normal(64), jnp.float32),
+        }
+        qtree = quantize_tree(params, fmt="int8", min_size=64)
+        assert isinstance(qtree["proj"], Quantized)
+        assert isinstance(qtree["bias"], jax.Array)  # 1-D stays f32
+        assert tree_quant_bytes(qtree) > 0
+
+        def step(p, x):
+            p = dequantize_tree(p)
+            return jnp.dot(x, p["proj"]) + p["bias"]
+
+        x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+        jitted = np.asarray(jax.jit(step)(qtree, x))
+        eager = np.asarray(
+            jnp.dot(x, dequantize_tree(qtree)["proj"]) + qtree["bias"]
+        )
+        np.testing.assert_allclose(jitted, eager, rtol=1e-6, atol=1e-6)
